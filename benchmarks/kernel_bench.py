@@ -1,0 +1,84 @@
+"""Crypto kernel microbenchmarks (CPU wall-clock; the Pallas path runs in
+interpret mode here — on TPU it is the deployment path)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto import bigint, paillier, ring
+from repro.crypto.bigint import Modulus
+from repro.kernels import ops
+
+RNG = np.random.default_rng(7)
+
+
+def _time(fn, *args, warmup: int = 1, reps: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6    # µs
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    # --- Montgomery product: library vs Pallas(interpret) ----------------
+    for bits in (256, 1024):
+        n = (1 << bits) - 159
+        mod = Modulus.make(n)
+        batch = 256
+        vals = RNG.integers(0, 1 << 62, size=batch).astype(object)
+        A = jnp.asarray(bigint.ints_to_limbs([int(v) % n for v in vals],
+                                             mod.L))
+        jit_lib = jax.jit(lambda a, b: bigint.mont_mul(a, b, mod))
+        us = _time(jit_lib, A, A)
+        rows.append((f"montmul_lib_{bits}b_x{batch}", us,
+                     f"{batch/us:.2f}mul_per_us"))
+        us = _time(lambda a, b: ops.montmul(a, b, mod, interpret=True), A, A)
+        rows.append((f"montmul_pallas_interp_{bits}b_x{batch}", us,
+                     f"{batch/us:.2f}mul_per_us"))
+
+    # --- Paillier primitive ops ------------------------------------------
+    key = paillier.keygen(256, seed=1)
+    pub = key.pub
+    m = paillier.encode_ints(pub, [123456] * 64)
+    rng = np.random.default_rng(2)
+    noise = paillier.noise_to_mont(pub, paillier.raw_noise(pub, 64, rng))
+    us = _time(jax.jit(lambda mm: paillier.encrypt_with_noise(
+        pub, mm, noise)), m)
+    rows.append(("paillier_enc_precomp_noise_x64_256b", us, ""))
+    c = paillier.encrypt_with_noise(pub, m, noise)
+    us = _time(jax.jit(lambda cc: paillier.decrypt(key, cc)), c)
+    rows.append(("paillier_dec_x64_256b", us, ""))
+    us_crt = _time(jax.jit(lambda cc: paillier.decrypt_crt(key, cc)), c)
+    rows.append(("paillier_dec_crt_x64_256b", us_crt,
+                 f"speedup={us/us_crt:.2f}x"))
+    us = _time(jax.jit(lambda cc: paillier.add_ct(pub, cc, cc)), c)
+    rows.append(("paillier_hom_add_x64_256b", us, ""))
+
+    # --- HE matvec (Protocol 3 hot path): bit-serial vs windowed ---------
+    from repro.core import protocols
+    exps = jnp.asarray(RNG.integers(0, 1 << 22, size=(64, 8),
+                                    dtype=np.uint32))
+    us_b = _time(lambda cc, ee: protocols.he_matvec(pub, cc, ee, 22,
+                                                    window=1), c, exps)
+    rows.append(("he_matvec_bitserial_64x8_w22_256b", us_b,
+                 f"{64*8/us_b:.3f}cells_per_us"))
+    us_w = _time(lambda cc, ee: protocols.he_matvec(pub, cc, ee, 22,
+                                                    window=4), c, exps)
+    rows.append(("he_matvec_window4_64x8_w22_256b", us_w,
+                 f"{64*8/us_w:.3f}cells_per_us;speedup={us_b/us_w:.2f}x"))
+
+    # --- ring64 matmul: jnp reference vs Pallas(interpret) ---------------
+    M, K, N = 128, 256, 64
+    a = ring.from_numpy_u64(RNG.integers(0, 1 << 64, (M, K), dtype=np.uint64))
+    b = ring.from_numpy_u64(RNG.integers(0, 1 << 64, (K, N), dtype=np.uint64))
+    us = _time(lambda x, y: ops.ring_matmul(x, y, tm=64, tn=64), a, b)
+    rows.append((f"ring64_matmul_pallas_{M}x{K}x{N}", us,
+                 f"{2*M*K*N/us/1e6:.2f}Gmac_per_s"))
+    return rows

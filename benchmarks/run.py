@@ -1,0 +1,119 @@
+"""Benchmark harness — one entry per paper table/figure plus kernel and
+roofline reports.  Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--paper] [--only table1_lr]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _csv(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_table1(paper_scale: bool) -> None:
+    from benchmarks import table1_lr
+    t0 = time.perf_counter()
+    rows = table1_lr.run(paper_scale)
+    total = (time.perf_counter() - t0) * 1e6
+    for r in rows:
+        ref = r.pop("paper_ref")
+        _csv(f"table1.{r['framework']}", r["runtime_s"] * 1e6,
+             f"auc={r['auc']};ks={r['ks']};comm_mb={r['comm_mb']};"
+             f"paper_auc={ref[0]};paper_comm_mb={ref[2]}")
+    _csv("table1.total", total)
+
+
+def bench_table2(paper_scale: bool) -> None:
+    from benchmarks import table2_pr
+    rows = table2_pr.run(paper_scale)
+    for r in rows:
+        ref = r.pop("paper_ref")
+        _csv(f"table2.{r['framework']}", r["runtime_s"] * 1e6,
+             f"mae={r['mae']};rmse={r['rmse']};comm_mb={r['comm_mb']};"
+             f"paper_mae={ref[0]};paper_comm_mb={ref[2]}")
+
+
+def bench_fig1(_: bool) -> None:
+    from benchmarks import fig1_losses
+    curves = fig1_losses.run()
+    for glm, c in curves.items():
+        gap = max(abs(a - b) for a, b in zip(c["efmvfl"], c["centralized"]))
+        _csv(f"fig1.{glm}", 0.0,
+             f"iters={len(c['efmvfl'])};max_gap_vs_centralized={gap:.4f}")
+        print(f"# fig1.{glm}.efmvfl="
+              + ";".join(f"{v:.4f}" for v in c["efmvfl"]))
+        print(f"# fig1.{glm}.tp="
+              + ";".join(f"{v:.4f}" for v in c["tp"]))
+
+
+def bench_fig2(_: bool) -> None:
+    from benchmarks import fig2_scaling
+    rows = fig2_scaling.run()
+    for r in rows:
+        if "parties" in r:
+            _csv(f"fig2.parties{r['parties']}", r["runtime_s"] * 1e6,
+                 f"comm_mb={r['comm_mb']}")
+        else:
+            _csv("fig2.linear_fit", 0.0,
+                 f"slope_mb_per_party={r['slope_mb_per_party']};"
+                 f"max_residual_mb={r['max_residual_mb']}")
+
+
+def bench_kernels(_: bool) -> None:
+    from benchmarks import kernel_bench
+    for name, us, derived in kernel_bench.run():
+        _csv(f"kernel.{name}", us, derived)
+
+
+def bench_roofline(_: bool) -> None:
+    from benchmarks import roofline
+    rows = roofline.run()
+    if not rows:
+        print("# roofline: no dry-run results found "
+              "(run python -m repro.launch.dryrun --all first)")
+        return
+    for r in rows:
+        if r["status"] != "ok":
+            _csv(f"roofline.{r['arch']}.{r['cell']}.{r['mesh']}", 0.0,
+                 f"FAIL:{r['error']}")
+            continue
+        _csv(f"roofline.{r['arch']}.{r['cell']}.{r['mesh']}",
+             max(r["compute_ms"], r["memory_ms"], r["collective_ms"]) * 1e3,
+             f"dom={r['dominant']};frac={r['roofline_frac']};"
+             f"useful={r['useful_flops_ratio']};peak_gib={r['peak_gib']}")
+
+
+BENCHES = {
+    "table1_lr": bench_table1,
+    "table2_pr": bench_table2,
+    "fig1_losses": bench_fig1,
+    "fig2_scaling": bench_fig2,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full paper-scale configurations (slow on CPU)")
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(args.paper)
+        except Exception as e:   # noqa: BLE001 — report and continue
+            _csv(f"{name}.ERROR", 0.0, f"{type(e).__name__}:{e}")
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Continuous-batching serving: ragged requests enter and leave the
+decode batch every step (slots > requests-in-flight are recycled live).
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import registry as models
+from repro.serve import ServeEngine
+
+
+def main():
+    cfg = registry.get_smoke_config("qwen3-4b")
+    api = models.build(cfg)
+    params = api.init_params(jax.random.key(0))
+    eng = ServeEngine(api, params, n_slots=4, max_len=128)
+
+    rng = np.random.default_rng(1)
+    n_req = 12
+    for i in range(n_req):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=int(
+            rng.integers(4, 14))), max_new_tokens=int(rng.integers(4, 20)))
+
+    t0 = time.perf_counter()
+    steps = 0
+    while eng.busy:
+        active = eng.step()
+        steps += 1
+        if steps % 8 == 0:
+            print(f"step {steps:3d}: {active} active, "
+                  f"{len(eng.finished)}/{n_req} done, "
+                  f"{len(eng.queue)} queued")
+    dt = time.perf_counter() - t0
+    total_toks = sum(len(r.generated) for r in eng.finished)
+    print(f"\nserved {n_req} ragged requests ({total_toks} tokens) in "
+          f"{steps} steps / {dt:.1f}s with 4 slots "
+          f"→ {total_toks/dt:.1f} tok/s (CPU, smoke config)")
+    assert len(eng.finished) == n_req
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Multi-party EFMVFL (§4.3): four parties, random computing-party
+selection per iteration, REAL Paillier keys (256-bit demo size).
+
+  PYTHONPATH=src python examples/multiparty_credit_scoring.py
+"""
+import numpy as np
+
+from repro.core import metrics, trainer
+from repro.core.trainer import PartyData, VFLConfig
+from repro.data import synthetic, vertical
+
+
+def main():
+    X, y = synthetic.credit_default(n=400, d=16, seed=1)
+    parts = vertical.split_columns(X, 4)
+    names = ["C", "B1", "B2", "B3"]
+    parties = [PartyData(nm, p) for nm, p in zip(names, parts)]
+
+    cfg = VFLConfig(glm="logistic", lr=0.2, max_iter=4, batch_size=128,
+                    he_backend="paillier", key_bits=256,
+                    cp_selection="random", tol=0.0, seed=2)
+    print("running 4-party EFMVFL with real Paillier (256-bit demo keys;"
+          " production uses 1024+)…")
+    res = trainer.train_vfl(parties, y, cfg)
+    wx = res.predict_wx(parties)
+    print(f"iterations   : {res.n_iter}")
+    print(f"losses       : {[round(l, 4) for l in res.losses]}")
+    print(f"train AUC    : {metrics.auc(y, wx):.3f}")
+    print(f"total comm   : {res.meter.total_mb:.2f} MB")
+    print("per-party weights held locally:",
+          {p.name: res.weights[p.name].shape for p in parties})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Batched serving demo: prefill a batch of prompts, then decode with the
+KV cache (the serve_step the decode_* dry-run cells lower).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import registry as models
+
+
+def main():
+    cfg = registry.get_smoke_config("qwen3-4b")
+    api = models.build(cfg)
+    params = api.init_params(jax.random.key(0))
+
+    B, prompt_len, gen_len, max_len = 8, 16, 32, 64
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (B, prompt_len), dtype=np.int32)
+
+    prefill = jax.jit(lambda p, t: api.prefill(p, t, max_len=max_len))
+    decode = jax.jit(api.decode_step)
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, jnp.asarray(prompts))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    for _ in range(gen_len - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"prefilled {B}x{prompt_len}, decoded {B}x{gen_len} tokens "
+          f"in {dt:.2f}s → {B * gen_len / dt:.1f} tok/s (CPU, smoke config)")
+    print("sample:", np.asarray(out[0])[:16].tolist())
+    assert out.shape == (B, gen_len)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""EFMVFL × LM backbones (DESIGN.md §4): two organizations hold different
+private views of the same customers — one a text log (LM backbone), one
+tabular features (identity backbone).  They federate a logistic head with
+the paper's protocols; raw features and representations never move.
+
+  PYTHONPATH=src python examples/vfl_lm_head.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core import vfl_lm
+from repro.core.trainer import VFLConfig
+from repro.core.vfl_lm import BackboneParty, identity_backbone
+from repro.models import registry as models
+
+
+def main():
+    rng = np.random.default_rng(5)
+    n = 512
+
+    # Party C: tabular features + the label
+    X_tab, y = _tabular_task(rng, n)
+
+    # Party B1: token sequences correlated with the label
+    cfg_lm = registry.get_smoke_config("gpt-100m")
+    api = models.build(cfg_lm)
+    params = api.init_params(jax.random.key(0))
+    tokens = _token_view(rng, y, cfg_lm.vocab_size, n, seq=24)
+    extract = vfl_lm.make_lm_backbone(api, params, batch_size=64)
+
+    parties = [
+        BackboneParty("C", identity_backbone, X_tab),
+        BackboneParty("B1", extract, tokens),
+    ]
+    cfg = VFLConfig(glm="logistic", lr=0.3, max_iter=25, batch_size=256,
+                    he_backend="mock", tol=0.0, seed=6)
+    res, quality = vfl_lm.train_federated_head(parties, y, cfg)
+    print(f"iterations : {res.n_iter}")
+    print(f"train AUC  : {quality['train_auc']:.3f}")
+    print(f"total comm : {res.meter.total_mb:.2f} MB")
+    assert quality["train_auc"] > 0.60, "joint model should beat chance"
+
+    # ablation: tabular-only head (shows the LM party adds signal)
+    res_solo, q_solo = vfl_lm.train_federated_head(
+        [BackboneParty("C", identity_backbone, X_tab),
+         BackboneParty("B1", identity_backbone,
+                       rng.normal(size=(n, 4)))],      # noise party
+        y, cfg)
+    print(f"AUC with noise party instead of LM: {q_solo['train_auc']:.3f}")
+
+
+def _tabular_task(rng, n):
+    X = rng.normal(size=(n, 8))
+    w = rng.normal(size=8)
+    logits = 0.7 * (X @ w) + 0.5 * rng.normal(size=n)
+    y = np.where(logits > np.median(logits), 1.0, -1.0)
+    return X, y
+
+
+def _token_view(rng, y, vocab, n, seq):
+    """Positive customers draw tokens from one half of the vocab."""
+    toks = np.empty((n, seq), np.int32)
+    half = vocab // 2
+    for i in range(n):
+        lo, hi = (0, half) if y[i] > 0 else (half, vocab)
+        toks[i] = rng.integers(lo, hi, seq)
+    return toks
+
+
+if __name__ == "__main__":
+    main()

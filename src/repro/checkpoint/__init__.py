@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing."""
+from repro.checkpoint.manager import CheckpointManager, load_checkpoint
+
+__all__ = ["CheckpointManager", "load_checkpoint"]

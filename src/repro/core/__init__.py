@@ -1,0 +1,4 @@
+"""EFMVFL core: the paper's protocols, GLM family and training loop."""
+from repro.core import comm, glm, metrics, protocols, trainer
+
+__all__ = ["comm", "glm", "metrics", "protocols", "trainer"]

@@ -1,0 +1,204 @@
+"""Generalized linear models — the paper's model family (§3.3, §4.2).
+
+Each GLM supplies
+  * the gradient-operator `d` on secret shares (paper eq. 7 / 8): the part
+    of eq. (5) that must be computed jointly,
+  * the loss on shares (paper eq. 1 / 3, MacLaurin where the paper does),
+  * float-domain oracles (centralized training) for tests/benchmarks,
+  * the inverse link for prediction.
+
+Share-domain convention: all shared values carry `f` fractional bits; the
+1/m factor and fixed-point scaling are applied after gradient/loss values
+are *revealed to their owner* (exact, public constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.crypto import ring
+from repro.crypto.ring import R64
+from repro.mpc import beaver, sharing, truncation
+
+
+@dataclasses.dataclass(frozen=True)
+class ShareCtx:
+    """Both CPs' shares of the Protocol-1 outputs, plus triple source.
+    Simulation mode: index 0 == party C's share, 1 == party B1's."""
+    z: tuple[R64, R64]                 # shares of WX = sum_p W_p X_p
+    y: tuple[R64, R64] | None          # shares of the label (C shared it)
+    ez: tuple[R64, R64] | None         # shares of e^{WX} (Poisson only)
+    f: int                             # fractional bits
+    dealer: beaver.DealerTripleSource
+
+
+def _shift(shares: tuple[R64, R64], s: int) -> tuple[R64, R64]:
+    """Multiply the shared value by 2^-s (probabilistic truncation)."""
+    return truncation.trunc_pair(shares[0], shares[1], s)
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression (paper eq. 1, 2, 7) — Y ∈ {−1, +1}
+# ---------------------------------------------------------------------------
+
+def lr_gradient_operator(ctx: ShareCtx) -> tuple[R64, R64]:
+    """d = 0.25*WX − 0.5*Y (MacLaurin, eq. 7; 1/m deferred to reveal)."""
+    qz = _shift(ctx.z, 2)
+    hy = _shift(ctx.y, 1)
+    return (ring.sub(qz[0], hy[0]), ring.sub(qz[1], hy[1]))
+
+
+def lr_loss_shares(ctx: ShareCtx) -> tuple[R64, R64]:
+    """Σ_i ln(1+e^{−t}) with t=Y·WX, 2nd-order MacLaurin:
+    ln2 − t/2 + t²/8 (same approximation family the paper uses)."""
+    n = ctx.z[0].lo.shape[0]
+    t = beaver.mul(ctx.y, ctx.z, *ctx.dealer.elementwise(ctx.z[0].lo.shape))
+    t = _shift(t, ctx.f)
+    t2 = beaver.mul(t, t, *ctx.dealer.elementwise(ctx.z[0].lo.shape))
+    t2 = _shift(t2, ctx.f)
+    half_t = truncation.trunc_pair(t[0], t[1], 1)
+    eighth_t2 = truncation.trunc_pair(t2[0], t2[1], 3)
+    li = (ring.sub(eighth_t2[0], half_t[0]), ring.sub(eighth_t2[1], half_t[1]))
+    s0 = ring.sum_axis(li[0], 0)
+    s1 = ring.sum_axis(li[1], 0)
+    ln2 = ring.from_signed_f64(np.float64(n * math.log(2.0)), ctx.f)
+    s0 = ring.add(s0, ln2)   # public constant: party 0 adds
+    return s0, s1
+
+
+# ---------------------------------------------------------------------------
+# Poisson regression (paper eq. 3, 4, 8)
+# ---------------------------------------------------------------------------
+
+def pr_gradient_operator(ctx: ShareCtx) -> tuple[R64, R64]:
+    """d = e^{WX} − Y (eq. 8).  e^{WX} shares come from Protocol 1
+    (parties share local e^{W_p X_p}; products via Beaver, see trainer)."""
+    assert ctx.ez is not None, "Poisson needs shares of e^{WX}"
+    return (ring.sub(ctx.ez[0], ctx.y[0]), ring.sub(ctx.ez[1], ctx.y[1]))
+
+
+def pr_loss_shares(ctx: ShareCtx) -> tuple[R64, R64]:
+    """Σ_i (Y·WX − e^{WX}); the −ln(Y!) term is public to C and added
+    after reveal (C holds Y in plaintext)."""
+    t = beaver.mul(ctx.y, ctx.z, *ctx.dealer.elementwise(ctx.z[0].lo.shape))
+    t = _shift(t, ctx.f)
+    li = (ring.sub(t[0], ctx.ez[0]), ring.sub(t[1], ctx.ez[1]))
+    return ring.sum_axis(li[0], 0), ring.sum_axis(li[1], 0)
+
+
+# ---------------------------------------------------------------------------
+# Float-domain oracles + prediction (centralized reference & metrics)
+# ---------------------------------------------------------------------------
+
+def sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+@dataclasses.dataclass(frozen=True)
+class GLM:
+    name: str
+    gradient_operator: Callable[[ShareCtx], tuple[R64, R64]]
+    loss_shares: Callable[[ShareCtx], tuple[R64, R64]]
+    needs_exp: bool
+    # float oracles -----------------------------------------------------
+    d_float: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    loss_float: Callable[[np.ndarray, np.ndarray], float]
+    predict: Callable[[np.ndarray], np.ndarray]
+    # C combines the revealed share-sum (float, already 2^-f scaled) with
+    # its public label knowledge:  loss = finalize_loss(revealed, y, m)
+    finalize_loss: Callable[[float, np.ndarray, int], float]
+    # sign of the exponent when parties share e^{±z_p} (poisson +1, gamma −1)
+    exp_sign: int = 1
+
+
+LOGISTIC = GLM(
+    name="logistic",
+    gradient_operator=lr_gradient_operator,
+    loss_shares=lr_loss_shares,
+    needs_exp=False,
+    d_float=lambda wx, y: 0.25 * wx - 0.5 * y,
+    loss_float=lambda wx, y: float(np.mean(
+        np.log(2.0) - 0.5 * (y * wx) + (y * wx) ** 2 / 8.0)),
+    predict=lambda wx: sigmoid(wx),
+    finalize_loss=lambda revealed, y, m: revealed / m,
+)
+
+POISSON = GLM(
+    name="poisson",
+    gradient_operator=pr_gradient_operator,
+    loss_shares=pr_loss_shares,
+    needs_exp=True,
+    d_float=lambda wx, y: np.exp(wx) - y,
+    loss_float=lambda wx, y: float(-np.mean(
+        y * wx - np.exp(wx) - _log_factorial(y))),
+    predict=lambda wx: np.exp(wx),
+    finalize_loss=lambda revealed, y, m: (
+        float(np.sum(_log_factorial(y))) - revealed) / m,
+)
+
+LINEAR = GLM(   # bonus GLM (paper: "also suitable for Linear, Gamma, …")
+    name="linear",
+    gradient_operator=lambda ctx: (ring.sub(ctx.z[0], ctx.y[0]),
+                                   ring.sub(ctx.z[1], ctx.y[1])),
+    loss_shares=lambda ctx: _mse_loss_shares(ctx),
+    needs_exp=False,
+    d_float=lambda wx, y: wx - y,
+    loss_float=lambda wx, y: float(0.5 * np.mean((wx - y) ** 2)),
+    predict=lambda wx: wx,
+    finalize_loss=lambda revealed, y, m: revealed / m,
+)
+
+
+def _mse_loss_shares(ctx: ShareCtx) -> tuple[R64, R64]:
+    r = (ring.sub(ctx.z[0], ctx.y[0]), ring.sub(ctx.z[1], ctx.y[1]))
+    r2 = beaver.mul(r, r, *ctx.dealer.elementwise(ctx.z[0].lo.shape))
+    r2 = _shift(r2, ctx.f + 1)
+    return ring.sum_axis(r2[0], 0), ring.sum_axis(r2[1], 0)
+
+
+def _log_factorial(y: np.ndarray) -> np.ndarray:
+    from scipy.special import gammaln
+    return gammaln(np.asarray(y, np.float64) + 1.0)
+
+
+# --- Gamma / Tweedie (paper §4.2: "also suitable for Linear, Gamma,
+# Tweedie regression, etc.") — log link, so the gradient-operator has the
+# same e^{WX} − y·(…) structure as Poisson and reuses its share plumbing.
+
+def gamma_gradient_operator(ctx: ShareCtx) -> tuple[R64, R64]:
+    """Gamma with log link: d = 1 − y·e^{−WX}.  Protocol form: parties
+    share e^{-z_p} in the ez slot (trainer handles the sign), giving
+    d = 1 − y∘ez via one Beaver product."""
+    assert ctx.ez is not None
+    prod = beaver.mul(ctx.y, ctx.ez,
+                      *ctx.dealer.elementwise(ctx.z[0].lo.shape))
+    prod = _shift(prod, ctx.f)
+    one = ring.from_signed_f64(np.ones(ctx.z[0].lo.shape), ctx.f)
+    return (ring.sub(one, prod[0]), ring.neg(prod[1]))
+
+
+def gamma_loss_shares(ctx: ShareCtx) -> tuple[R64, R64]:
+    """Σ_i (WX + y·e^{−WX}) (unit-deviance core; constants at C)."""
+    prod = beaver.mul(ctx.y, ctx.ez,
+                      *ctx.dealer.elementwise(ctx.z[0].lo.shape))
+    prod = _shift(prod, ctx.f)
+    li = (ring.add(ctx.z[0], prod[0]), ring.add(ctx.z[1], prod[1]))
+    return ring.sum_axis(li[0], 0), ring.sum_axis(li[1], 0)
+
+
+GAMMA = GLM(
+    name="gamma",
+    gradient_operator=gamma_gradient_operator,
+    loss_shares=gamma_loss_shares,
+    needs_exp=True,          # trainer shares e^{-z_p} for gamma
+    d_float=lambda wx, y: 1.0 - y * np.exp(-wx),
+    loss_float=lambda wx, y: float(np.mean(wx + y * np.exp(-wx))),
+    predict=lambda wx: np.exp(wx),
+    finalize_loss=lambda revealed, y, m: revealed / m,
+    exp_sign=-1,
+)
+
+GLMS = {g.name: g for g in (LOGISTIC, POISSON, LINEAR, GAMMA)}

@@ -1,0 +1,320 @@
+"""EFMVFL Protocols 2–4 (Protocol 1 lives in mpc.sharing).
+
+The crown jewel is Protocol 3 (secure gradient computing): the non-local
+share of g_p = X_p^T d is evaluated under the *other* party's Paillier key
+as a plaintext-matrix × ciphertext-vector product, masked, decrypted by
+the key owner and unmasked locally — "only one product between plaintext
+matrix and ciphertext vector for each party in each iteration" (paper §5.3).
+
+Engineering notes (DESIGN.md §7):
+
+* Exponent offset trick: X's signed fixed-point entries are lifted by
+  OFF = 2^{w−1} so every HE exponent is a short non-negative integer
+  (w ≈ 22 bits instead of 64): the key owner removes the OFF·Σ⟨d⟩ term
+  *locally* after decryption since it knows its own d-share.  This is a
+  beyond-paper micro-optimization (≈3× fewer Montgomery ops) that changes
+  no message flow.
+* Exact mod-2^64 semantics: all Z_n values stay non-negative integers
+  < n, so reducing decrypted integers mod 2^64 recovers ring shares
+  exactly (Paillier plaintext wrap never triggers).
+* `MockHEBackend` carries the identical mod-2^64 values without
+  encryption and meters identical wire bytes — used for large-scale
+  benchmarks; `tests/test_protocols.py` asserts mock ≡ Paillier bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import CommMeter
+from repro.crypto import bigint, fixed_point, paillier, prng, ring
+from repro.crypto.bigint import mont_mul, mont_one
+from repro.crypto.ring import R64
+
+_U32 = jnp.uint32
+
+DEFAULT_EXP_BITS = 22   # fixed-point feature width + sign headroom
+STAT_SEC = 40           # statistical masking security (bits)
+
+
+# ---------------------------------------------------------------------------
+# HE matvec:  out_j = ⊕_i  (cts_i ⊗ exps[i, j])      (Protocol 3 line 4)
+# ---------------------------------------------------------------------------
+
+def _tree_hom_prod(c: jnp.ndarray, mod) -> jnp.ndarray:
+    """⊕-reduce axis 0 of Montgomery-domain ciphertexts (log-depth)."""
+    while c.shape[0] > 1:
+        half = c.shape[0] // 2
+        merged = mont_mul(c[:half], c[half:2 * half], mod)
+        if c.shape[0] % 2:
+            merged = jnp.concatenate([merged, c[2 * half:]], axis=0)
+        c = merged
+    return c[0]
+
+
+DEFAULT_WINDOW = 4      # fixed-window exponentiation (§Perf: 3.7× fewer
+                        # Montgomery products than bit-serial at w=22)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _he_matvec_bitserial(pub_static, cts, exps, width):
+    pub = pub_static.pub
+    mod = pub.mod_n2
+    bits = fixed_point.int_bits_msb(exps, width)          # (n, m, w)
+    one = jnp.broadcast_to(mont_one(mod), cts.shape)       # (n, L2)
+    m = exps.shape[1]
+    acc0 = jnp.broadcast_to(mont_one(mod), (m, mod.L))
+
+    def step(acc, bits_t):                                # bits_t: (n, m)
+        acc = mont_mul(acc, acc, mod)
+        sel = jnp.where(bits_t[..., None] == 1,
+                        cts[:, None, :], one[:, None, :])  # (n, m, L2)
+        prod = _tree_hom_prod(sel, mod)                    # (m, L2)
+        return mont_mul(acc, prod, mod), None
+
+    acc, _ = jax.lax.scan(step, acc0, jnp.moveaxis(bits, -1, 0))
+    return acc
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def _he_matvec_windowed(pub_static, cts, exps, width, window):
+    """Fixed-window ladder: precompute c_i^j for j<2^window once per row,
+    then one gather + tree-⊕ per digit level.  Montgomery-product count:
+      n·(2^w − 2)  precompute  +  levels·(n·m tree + w·m squarings)
+    vs bit-serial  width·(n·m + 2m) — ≈ window× fewer in the n·m term."""
+    pub = pub_static.pub
+    mod = pub.mod_n2
+    n, L2 = cts.shape
+    m = exps.shape[1]
+    levels = -(-width // window)
+    pad_width = levels * window
+    # digit decomposition, MSB-first: (n, m, levels) values in [0, 2^w)
+    digits = []
+    for lvl in range(levels):
+        shift = (levels - 1 - lvl) * window
+        digits.append((exps >> shift) & ((1 << window) - 1))
+    digits = jnp.stack(digits, axis=-1)
+    del pad_width
+    # power table: (2^w, n, L2)
+    table = [jnp.broadcast_to(mont_one(mod), cts.shape), cts]
+    for _ in range(2, 1 << window):
+        table.append(mont_mul(table[-1], cts, mod))
+    table = jnp.stack(table, axis=0)
+
+    acc0 = jnp.broadcast_to(mont_one(mod), (m, mod.L))
+
+    def step(acc, digits_lvl):                            # (n, m)
+        for _ in range(window):
+            acc = mont_mul(acc, acc, mod)
+        # gather c_i^{digit}: (n, m, L2)
+        sel = jnp.take_along_axis(
+            table[:, :, None, :], digits_lvl[None, :, :, None], axis=0)[0]
+        prod = _tree_hom_prod(sel, mod)
+        return mont_mul(acc, prod, mod), None
+
+    acc, _ = jax.lax.scan(step, acc0, jnp.moveaxis(digits, -1, 0))
+    return acc
+
+
+class _HashablePub:
+    """Hashable wrapper so the public key can be a static jit arg."""
+
+    def __init__(self, pub: paillier.PublicKey):
+        self.pub = pub
+
+    def __hash__(self):
+        return hash(self.pub.n)
+
+    def __eq__(self, other):
+        return isinstance(other, _HashablePub) and other.pub.n == self.pub.n
+
+
+def he_matvec(pub: paillier.PublicKey, cts: jnp.ndarray,
+              exps: jnp.ndarray, width: int,
+              window: int = DEFAULT_WINDOW) -> jnp.ndarray:
+    """cts: (n, L2) Montgomery ciphertexts; exps: (n, m) uint32 < 2^width.
+    Returns (m, L2) ciphertexts of Σ_i exps[i,j]·m_i (integer, no wrap).
+    window=1 → bit-serial ladder; window=4 (default) → fixed-window."""
+    if window <= 1:
+        return _he_matvec_bitserial(_HashablePub(pub), cts,
+                                    exps.astype(_U32), width)
+    return _he_matvec_windowed(_HashablePub(pub), cts, exps.astype(_U32),
+                               width, window)
+
+
+# ---------------------------------------------------------------------------
+# HE backends
+# ---------------------------------------------------------------------------
+
+class PaillierBackend:
+    """Real Paillier (128…2048-bit keys).  Each party owns a keypair."""
+
+    name = "paillier"
+
+    def __init__(self, keys: dict[str, paillier.PrivateKey],
+                 rng: np.random.Generator):
+        self.keys = keys
+        self.rng = rng
+
+    def key_bits(self, party: str) -> int:
+        return self.keys[party].pub.key_bits
+
+    def encrypt_share(self, party: str, d: R64) -> jnp.ndarray:
+        pub = self.keys[party].pub
+        m = fixed_point.r64_to_limbs(d, pub.Ln)
+        return paillier.encrypt(pub, m, rng=self.rng)
+
+    def matvec(self, party: str, cts, exps, width) -> jnp.ndarray:
+        return he_matvec(self.keys[party].pub, cts, exps, width)
+
+    def add_mask(self, party: str, cts, mask_ints: list[int]) -> jnp.ndarray:
+        """cts ⊕ Enc(R) with fresh noise — masks AND re-randomizes."""
+        pub = self.keys[party].pub
+        m = bigint.ints_to_limbs(mask_ints, pub.Ln)
+        cr = paillier.encrypt(pub, m, rng=self.rng)
+        return paillier.add_ct(pub, cts, cr)
+
+    def decrypt_to_r64(self, party: str, cts) -> R64:
+        dec = paillier.decrypt(self.keys[party], cts)
+        return fixed_point.limbs_to_r64(dec)
+
+
+class MockHEBackend:
+    """Carries the identical mod-2^64 integers without encryption (for
+    large benchmarks).  Message flow, masking and byte accounting are
+    identical to PaillierBackend; tests assert value-equality."""
+
+    name = "mock"
+
+    def __init__(self, key_bits: int = 1024):
+        self._key_bits = key_bits
+
+    def key_bits(self, party: str) -> int:
+        return self._key_bits
+
+    def encrypt_share(self, party: str, d: R64) -> R64:
+        return d
+
+    def matvec(self, party: str, cts: R64, exps, width) -> R64:
+        xs = exps.astype(_U32)
+        xa = R64(jnp.zeros_like(xs), xs)                 # lift u32 exponents
+        # (n, m) exps × (n,) cts -> (m,)
+        prod = ring.mul(xa, R64(cts.hi[:, None], cts.lo[:, None]))
+        return ring.sum_axis(prod, 0)
+
+    def add_mask(self, party: str, cts: R64, mask_ints: list[int]) -> R64:
+        m = ring.from_numpy_u64(
+            np.array([v % (1 << 64) for v in mask_ints], np.uint64))
+        return ring.add(cts, m)
+
+    def decrypt_to_r64(self, party: str, cts: R64) -> R64:
+        return cts
+
+
+# ---------------------------------------------------------------------------
+# Protocol 3 — secure gradient computing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EncodedFeatures:
+    """A party's local features in protocol form."""
+    x_int: np.ndarray        # (n, m_p) int32 signed fixed-point
+    exps: np.ndarray         # (n, m_p) uint32 = x_int + OFF
+    fx: int
+    width: int
+
+    @staticmethod
+    def make(x: np.ndarray, fx: int, width: int = DEFAULT_EXP_BITS):
+        xi = np.rint(np.asarray(x, np.float64) * (1 << fx)).astype(np.int64)
+        off = 1 << (width - 1)
+        if np.any(np.abs(xi) >= off):
+            raise ValueError("feature fixed-point exceeds exponent width; "
+                             "raise width or normalize features")
+        return EncodedFeatures(
+            x_int=xi.astype(np.int32),
+            exps=(xi + off).astype(np.uint32),
+            fx=fx, width=width)
+
+
+def mask_ints(bound_bits: int, m: int, rng: np.random.Generator) -> list[int]:
+    """Statistical masks R_j uniform in [0, 2^(bound_bits + STAT_SEC))."""
+    return prng.host_uniform_below(1 << (bound_bits + STAT_SEC), m, rng=rng)
+
+
+def offset_correction(d_share: R64, width: int) -> R64:
+    """OFF · Σ_i ⟨d⟩_i  mod 2^64 — the key owner's local correction."""
+    s = ring.sum_axis(d_share, 0)
+    return ring.mul_pub_int(s, 1 << (width - 1))
+
+
+def secure_gradient_cp(
+    backend, meter: CommMeter, *,
+    p0: str, p1: str,
+    feats: EncodedFeatures,
+    d_self: R64,                  # ⟨d⟩_{p0}, held by p0
+    d_other_ct,                   # [[⟨d⟩_{p1}]]_{p1}, received from p1
+    d_other_share: R64,           # ⟨d⟩_{p1} (used only for p1's local step)
+    mask_bound_bits: int,
+    rng: np.random.Generator,
+) -> R64:
+    """Protocol 3 with P0 = a computing party.  Returns g_{p0} as ring
+    fixed-point with (fx + f) fractional bits (simulation evaluates both
+    parties' local steps)."""
+    n, m = feats.exps.shape
+    # line 2: local share of the gradient
+    g_self = ring.matmul(jnp.asarray(feats.x_int.T), _as_col(d_self))
+    g_self = _from_col(g_self)
+    # line 4: plaintext-matrix × ciphertext-vector (the paper's hot spot)
+    enc_g = backend.matvec(p1, d_other_ct, jnp.asarray(feats.exps), feats.width)
+    # lines 5-6: mask + (re-randomized) send to p1
+    R = mask_ints(mask_bound_bits, m, rng)
+    enc_masked = backend.add_mask(p1, enc_g, R)
+    meter.cipher(p0, p1, "P3.masked_grad", m, backend.key_bits(p1))
+    # line 7 (at p1): decrypt, reduce mod 2^64, remove the offset term
+    w = backend.decrypt_to_r64(p1, enc_masked)
+    w = ring.sub(w, offset_correction(d_other_share, feats.width))
+    meter.ring(p1, p0, "P3.unmasked_share", m)
+    # line 8 (at p0): combine and unmask
+    Rr = ring.from_numpy_u64(np.array([r % (1 << 64) for r in R], np.uint64))
+    return ring.sub(ring.add(g_self, w), Rr)
+
+
+def secure_gradient_noncp(
+    backend, meter: CommMeter, *,
+    party: str, cps: tuple[str, str],
+    feats: EncodedFeatures,
+    d_cts: dict,                  # {cp: [[⟨d⟩_cp]]_cp} received broadcasts
+    d_shares: dict,               # {cp: ⟨d⟩_cp} (for each CP's local step)
+    mask_bound_bits: int,
+    rng: np.random.Generator,
+) -> R64:
+    """Algorithm 1 lines 17–21: a non-computing party computes its gradient
+    under BOTH CPs' keys.  g_p = Σ_cp (dec_cp − R_cp-correction)."""
+    n, m = feats.exps.shape
+    total = ring.zeros((m,))
+    for cp in cps:
+        enc_g = backend.matvec(cp, d_cts[cp], jnp.asarray(feats.exps),
+                               feats.width)
+        R = mask_ints(mask_bound_bits, m, rng)
+        enc_masked = backend.add_mask(cp, enc_g, R)
+        meter.cipher(party, cp, "P3.masked_grad", m, backend.key_bits(cp))
+        w = backend.decrypt_to_r64(cp, enc_masked)
+        w = ring.sub(w, offset_correction(d_shares[cp], feats.width))
+        meter.ring(cp, party, "P3.unmasked_share", m)
+        Rr = ring.from_numpy_u64(np.array([r % (1 << 64) for r in R],
+                                          np.uint64))
+        total = ring.add(total, ring.sub(w, Rr))
+    return total
+
+
+def _as_col(d: R64) -> R64:
+    return R64(d.hi[:, None], d.lo[:, None])
+
+
+def _from_col(g: R64) -> R64:
+    return R64(g.hi[:, 0], g.lo[:, 0])

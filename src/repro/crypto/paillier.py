@@ -1,0 +1,340 @@
+"""Paillier cryptosystem on limb vectors.
+
+* Key generation is host-side python (Miller–Rabin primes) — a one-time,
+  per-deployment cost, exactly as in production VFL stacks.
+* Enc / Dec / homomorphic ops are vectorized JAX over ciphertext batches;
+  ciphertexts live in the *Montgomery domain mod n^2* end to end, so
+  homomorphic addition is a single `mont_mul` and scalar multiplication is
+  a constant-time Montgomery ladder.
+* Plaintext convention (see DESIGN.md §7): protocol plaintexts are
+  non-negative integers < n; ring-2^64 share semantics are recovered by
+  reducing decrypted integers mod 2^64, so multipliers may be lifted to
+  their non-negative residues mod 2^64 and no ciphertext inversion is
+  ever required.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto import bigint
+from repro.crypto.bigint import (LIMB_BITS, Modulus, add_small, big_mul_full,
+                                 from_mont, int_to_bits, int_to_limbs,
+                                 limbs_to_int, mont_exp_bits, mont_exp_const,
+                                 mont_mul, mul_low, nlimbs, sub_small, to_mont)
+
+_U32 = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# Host-side prime generation
+# ---------------------------------------------------------------------------
+
+_SMALL_PRIMES = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53,
+                 59, 61, 67, 71, 73, 79, 83, 89, 97]
+
+
+def _is_probable_prime(n: int, rng: np.random.Generator, rounds: int = 40) -> bool:
+    if n < 2:
+        return False
+    for p in _SMALL_PRIMES:
+        if n % p == 0:
+            return n == p
+    d, r = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        r += 1
+    for _ in range(rounds):
+        a = 2 + int(rng.integers(0, 1 << 62)) % (n - 3)
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(r - 1):
+            x = (x * x) % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def gen_prime(bits: int, rng: np.random.Generator) -> int:
+    while True:
+        raw = int.from_bytes(rng.bytes((bits + 7) // 8), "little")
+        cand = (raw | (1 << (bits - 1)) | 1) & ((1 << bits) - 1)
+        if _is_probable_prime(cand, rng):
+            return cand
+
+
+# ---------------------------------------------------------------------------
+# Keys
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PublicKey:
+    n: int
+    key_bits: int
+    mod_n: Modulus
+    mod_n2: Modulus
+    n_limbs: np.ndarray          # n as Ln-limb vector (for 1 + m*n)
+
+    @property
+    def Ln(self) -> int:
+        return self.mod_n.L
+
+    @property
+    def Ln2(self) -> int:
+        return self.mod_n2.L
+
+    @property
+    def msg_bits(self) -> int:
+        """Safe plaintext magnitude for exact-integer protocol arithmetic."""
+        return self.n.bit_length() - 2
+
+
+@dataclasses.dataclass(frozen=True)
+class CRTComponent:
+    """Per-prime data for CRT-accelerated decryption (mod p² / q²)."""
+    prime: int
+    mod_p2: Modulus
+    lam_bits: np.ndarray         # bits of p-1
+    h_mont: np.ndarray           # L_p(g^{p-1} mod p²)^{-1} · R_p mod p
+    hensel_p: np.ndarray         # p^{-1} mod 2^(12·Lp2)
+    mod_p: Modulus
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivateKey:
+    pub: PublicKey
+    lam: int
+    lam_bits: np.ndarray         # MSB-first bit vector of lambda
+    mu_mont: np.ndarray          # mu * R_n mod n  (fold mu into one mont_mul)
+    hensel_n: np.ndarray         # n^{-1} mod 2^(12*Ln2) for exact (u-1)/n
+    # CRT acceleration (≈4×: two half-size modexps with half-size exponents)
+    crt_p: CRTComponent | None = None
+    crt_q: CRTComponent | None = None
+    q_pinv_mont: np.ndarray | None = None   # p^{-1}·R_q mod q (CRT combine)
+
+
+def _crt_component(prime: int, n: int) -> CRTComponent:
+    p2 = prime * prime
+    mod_p2 = Modulus.make(p2)
+    mod_p = Modulus.make(prime)
+    # h_p = L_p(g^{p-1} mod p²)^{-1} mod p, g = n+1
+    u = pow(n + 1, prime - 1, p2)
+    lp = (u - 1) // prime
+    h = pow(lp, -1, prime)
+    R_p = 1 << (LIMB_BITS * mod_p.L)
+    return CRTComponent(
+        prime=prime, mod_p2=mod_p2,
+        lam_bits=int_to_bits(prime - 1, (prime - 1).bit_length()),
+        h_mont=int_to_limbs((h * R_p) % prime, mod_p.L),
+        hensel_p=int_to_limbs(pow(prime, -1, 1 << (LIMB_BITS * mod_p2.L)),
+                              mod_p2.L),
+        mod_p=mod_p)
+
+
+def keygen(key_bits: int, seed: int | None = None) -> PrivateKey:
+    """Generate a Paillier keypair.  `key_bits` is the modulus size
+    (paper: 1024; tests default smaller for CPU speed)."""
+    rng = np.random.default_rng(seed)
+    half = key_bits // 2
+    while True:
+        p = gen_prime(half, rng)
+        q = gen_prime(key_bits - half, rng)
+        if p != q and (p * q).bit_length() == key_bits:
+            break
+    if p > q:
+        p, q = q, p          # CRT combine below assumes p < q
+    n = p * q
+    lam = math.lcm(p - 1, q - 1)
+    mod_n = Modulus.make(n)
+    mod_n2 = Modulus.make(n * n)
+    mu = pow(lam, -1, n)
+    R_n = 1 << (LIMB_BITS * mod_n.L)
+    R_q = 1 << (LIMB_BITS * Modulus.make(q).L)
+    pub = PublicKey(
+        n=n, key_bits=key_bits, mod_n=mod_n, mod_n2=mod_n2,
+        n_limbs=int_to_limbs(n, mod_n.L))
+    return PrivateKey(
+        pub=pub,
+        lam=lam,
+        lam_bits=int_to_bits(lam, lam.bit_length()),
+        mu_mont=int_to_limbs((mu * R_n) % n, mod_n.L),
+        hensel_n=int_to_limbs(pow(n, -1, 1 << (LIMB_BITS * mod_n2.L)),
+                              mod_n2.L),
+        crt_p=_crt_component(p, n),
+        crt_q=_crt_component(q, n),
+        q_pinv_mont=int_to_limbs((pow(p, -1, q) * R_q) % q,
+                                 Modulus.make(q).L),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Plaintext encode / decode (host helpers)
+# ---------------------------------------------------------------------------
+
+def encode_ints(pub: PublicKey, xs) -> np.ndarray:
+    """Non-negative python ints -> (batch, Ln) limb plaintexts."""
+    xs = [int(x) for x in np.atleast_1d(np.asarray(xs, dtype=object))]
+    for x in xs:
+        if x < 0 or x >= pub.n:
+            raise ValueError("plaintext out of range [0, n)")
+    return bigint.ints_to_limbs(xs, pub.Ln)
+
+
+def decode_ints(limbs) -> list[int]:
+    out = limbs_to_int(np.asarray(limbs))
+    return out if isinstance(out, list) else [out]
+
+
+# ---------------------------------------------------------------------------
+# Core ops (vectorized; ciphertexts are Montgomery-domain mod n^2)
+# ---------------------------------------------------------------------------
+
+def raw_noise(pub: PublicKey, batch: int,
+              rng: np.random.Generator | None = None) -> np.ndarray:
+    """Fresh encryption randomness r ∈ [1, n), as (batch, Ln2) limbs."""
+    from repro.crypto import prng
+    r = prng.host_uniform_limbs(pub.n, batch, pub.Ln, rng=rng, lo=1)
+    pad = np.zeros((batch, pub.Ln2 - pub.Ln), np.uint32)
+    return np.concatenate([r, pad], axis=-1)
+
+
+def noise_to_mont(pub: PublicKey, r_limbs) -> jnp.ndarray:
+    """r -> r^n mod n^2, Montgomery domain.  Precomputable offline
+    (encryption-noise precompute — amortizes the expensive modexp)."""
+    rm = to_mont(jnp.asarray(r_limbs, _U32), pub.mod_n2)
+    return mont_exp_const(rm, pub.n, pub.mod_n2)
+
+
+def encrypt_with_noise(pub: PublicKey, m_limbs, rn_mont) -> jnp.ndarray:
+    """Enc(m; r) = (1 + m n) * r^n mod n^2, given precomputed r^n."""
+    m = jnp.asarray(m_limbs, _U32)
+    mn = big_mul_full(m, jnp.asarray(pub.n_limbs, _U32), pub.Ln2)
+    c0 = add_small(mn, 1)
+    return mont_mul(to_mont(c0, pub.mod_n2), jnp.asarray(rn_mont, _U32),
+                    pub.mod_n2)
+
+
+def encrypt(pub: PublicKey, m_limbs, rng: np.random.Generator | None = None
+            ) -> jnp.ndarray:
+    m = jnp.asarray(m_limbs, _U32)
+    batch = int(np.prod(m.shape[:-1])) if m.ndim > 1 else 1
+    r = raw_noise(pub, batch, rng).reshape(m.shape[:-1] + (pub.Ln2,))
+    return encrypt_with_noise(pub, m, noise_to_mont(pub, r))
+
+
+def decrypt(priv: PrivateKey, c_mont) -> jnp.ndarray:
+    """-> plaintext limbs (…, Ln)."""
+    pub = priv.pub
+    u_m = mont_exp_bits(jnp.asarray(c_mont, _U32),
+                        jnp.asarray(priv.lam_bits), pub.mod_n2)
+    u = from_mont(u_m, pub.mod_n2)
+    um1 = sub_small(u, 1)
+    k = mul_low(um1, jnp.asarray(priv.hensel_n, _U32), pub.Ln2)[..., :pub.Ln]
+    return mont_mul(k, jnp.asarray(priv.mu_mont, _U32), pub.mod_n)
+
+
+def _dec_component(comp: CRTComponent, c_modp2_mont) -> jnp.ndarray:
+    """m_p = L_p(c^{p-1} mod p²) · h_p mod p."""
+    u_m = mont_exp_bits(c_modp2_mont, jnp.asarray(comp.lam_bits),
+                        comp.mod_p2)
+    u = from_mont(u_m, comp.mod_p2)
+    um1 = sub_small(u, 1)
+    k = mul_low(um1, jnp.asarray(comp.hensel_p, _U32),
+                comp.mod_p2.L)[..., :comp.mod_p.L]
+    return mont_mul(k, jnp.asarray(comp.h_mont, _U32), comp.mod_p)
+
+
+def decrypt_crt(priv: PrivateKey, c_mont) -> jnp.ndarray:
+    """CRT decryption (≈4× fewer limb-ops than `decrypt`): two half-size
+    modexps with half-size exponents, then Garner recombination
+      m = m_p + p · ((m_q − m_p) · p^{-1} mod q).
+    Returns plaintext limbs (…, Ln), identical to `decrypt` (tested)."""
+    pub = priv.pub
+    cp, cq = priv.crt_p, priv.crt_q
+    c = jnp.asarray(c_mont, _U32)
+    # ciphertext is Montgomery mod n²: leave the domain, then reduce
+    c_plain = from_mont(c, pub.mod_n2)
+    cp2 = to_mont(_reduce_mod(c_plain, cp.mod_p2), cp.mod_p2)
+    cq2 = to_mont(_reduce_mod(c_plain, cq.mod_p2), cq.mod_p2)
+    m_p = _dec_component(cp, cp2)                       # (…, Lp) < p
+    m_q = _dec_component(cq, cq2)                       # (…, Lq) < q
+    # Garner: t = (m_q − m_p) mod q;  m = m_p + p·(t·p^{-1} mod q)
+    Lq = cq.mod_p.L
+    m_p_padq = jnp.pad(m_p, [(0, 0)] * (m_p.ndim - 1)
+                       + [(0, max(0, Lq - m_p.shape[-1]))])[..., :Lq]
+    from repro.crypto.bigint import mod_sub
+    t = mod_sub(m_q, _reduce_mod(m_p_padq, cq.mod_p), cq.mod_p)
+    u = mont_mul(t, jnp.asarray(priv.q_pinv_mont, _U32), cq.mod_p)
+    pu = big_mul_full(jnp.asarray(int_to_limbs(cp.prime, cp.mod_p.L), _U32),
+                      u, pub.Ln)
+    m_p_padn = jnp.pad(m_p, [(0, 0)] * (m_p.ndim - 1)
+                       + [(0, pub.Ln - m_p.shape[-1])])
+    from repro.crypto.bigint import _add_limbs
+    out, _ = _add_limbs(jnp.broadcast_to(m_p_padn, pu.shape), pu)
+    return out
+
+
+def _fold_below(x: jnp.ndarray, mod: Modulus) -> jnp.ndarray:
+    """x mod N for canonical x < R = 2^(12·L): Montgomery round-trip —
+    mont_mul's bound holds for a < R, b < N, so to_mont then from_mont is
+    an exact general reduction."""
+    return from_mont(to_mont(x, mod), mod)
+
+
+def _reduce_mod(x: jnp.ndarray, mod: Modulus) -> jnp.ndarray:
+    """General reduction x mod N for canonical x of any width: split into
+    R-sized chunks, Horner fold (acc·R + chunk) with Montgomery ops."""
+    from repro.crypto.bigint import mod_add
+    L = mod.L
+    Lx = x.shape[-1]
+    n_chunks = -(-Lx // L)
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n_chunks * L - Lx)])
+    acc = _fold_below(xp[..., (n_chunks - 1) * L:n_chunks * L], mod)
+    for i in range(n_chunks - 2, -1, -1):
+        acc = to_mont(acc, mod)                 # acc · R mod N
+        chunk = _fold_below(xp[..., i * L:(i + 1) * L], mod)
+        acc = mod_add(acc, chunk, mod)
+    return acc
+
+
+def add_ct(pub: PublicKey, c1, c2) -> jnp.ndarray:
+    """[[a]] ⊕ [[b]] = [[a + b mod n]]."""
+    return mont_mul(jnp.asarray(c1, _U32), jnp.asarray(c2, _U32), pub.mod_n2)
+
+
+def smul_bits(pub: PublicKey, c, exp_bits) -> jnp.ndarray:
+    """[[a]] ⊗ k = [[a * k mod n]], k given as an MSB-first bit vector
+    (traced or constant).  Constant-time ladder."""
+    return mont_exp_bits(jnp.asarray(c, _U32), jnp.asarray(exp_bits),
+                         pub.mod_n2)
+
+
+def smul_const(pub: PublicKey, c, k: int) -> jnp.ndarray:
+    if k < 0:
+        raise ValueError("lift negative multipliers to residues first")
+    return mont_exp_const(jnp.asarray(c, _U32), k, pub.mod_n2)
+
+
+def hom_sum(pub: PublicKey, c, axis: int = 0) -> jnp.ndarray:
+    """⊕-reduce a batch of ciphertexts along `axis` (tree reduction —
+    the same schedule the mesh collective uses, see distributed/)."""
+    c = jnp.asarray(c, _U32)
+    c = jnp.moveaxis(c, axis, 0)
+    while c.shape[0] > 1:
+        half = c.shape[0] // 2
+        merged = mont_mul(c[:half], c[half:2 * half], pub.mod_n2)
+        if c.shape[0] % 2:
+            merged = jnp.concatenate([merged, c[2 * half:]], axis=0)
+        c = merged
+    return c[0]
+
+
+def ciphertext_bytes(pub: PublicKey) -> int:
+    """Wire size of one ciphertext (serialized canonical form)."""
+    return 2 * pub.key_bits // 8

@@ -1,0 +1,54 @@
+"""Randomness for shares, masks and Paillier noise.
+
+Two tiers:
+
+* Device tier — counter-based threefry (`jax.random`) for ring-2^64 share
+  material inside jitted protocol steps (cheap, reproducible, shardable).
+* Host tier — python `secrets`-grade integers for Paillier encryption
+  noise r ∈ [1, n) and statistical masks, converted to limb arrays.  On a
+  real deployment this would be an HSM/TRNG feed; the interface is the
+  same either way.
+"""
+from __future__ import annotations
+
+import secrets
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto import bigint
+
+
+def u32_pair(key: jax.Array, shape: Sequence[int]):
+    """Uniform (hi, lo) uint32 pairs == uniform Z_2^64 elements."""
+    k1, k2 = jax.random.split(key)
+    hi = jax.random.bits(k1, tuple(shape), dtype=jnp.uint32)
+    lo = jax.random.bits(k2, tuple(shape), dtype=jnp.uint32)
+    return hi, lo
+
+
+def host_uniform_below(n: int, size: int, *, rng: np.random.Generator | None = None,
+                       lo: int = 0) -> list[int]:
+    """size uniform ints in [lo, n).  Uses rejection sampling over raw
+    entropy; `rng` (seeded) is for reproducible tests, default is secrets."""
+    span = n - lo
+    nbits = span.bit_length()
+    out: list[int] = []
+    while len(out) < size:
+        if rng is None:
+            v = secrets.randbits(nbits)
+        else:
+            nbytes = (nbits + 7) // 8
+            v = int.from_bytes(rng.bytes(nbytes), "little") & ((1 << nbits) - 1)
+        if v < span:
+            out.append(lo + v)
+    return out
+
+
+def host_uniform_limbs(n: int, size: int, L: int, *,
+                       rng: np.random.Generator | None = None,
+                       lo: int = 0) -> np.ndarray:
+    vals = host_uniform_below(n, size, rng=rng, lo=lo)
+    return bigint.ints_to_limbs(vals, L)

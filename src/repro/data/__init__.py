@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic dataset twins, vertical splitting, resumable
+token streams for LM training."""
+from repro.data import synthetic, vertical
+
+__all__ = ["synthetic", "vertical"]

@@ -1,0 +1,2 @@
+"""Distribution layer: sharding rules (FSDP×TP×EP×SP), secure collectives,
+gradient compression, elastic resharding."""

@@ -1,0 +1,46 @@
+"""int8 gradient compression with error feedback — cross-pod DP traffic
+is the multi-pod bottleneck; 4× smaller all-reduces with EF keep
+convergence (1-bit-Adam-family result).
+
+Pure-functional: `compress` quantizes grad+error to int8 with a per-tensor
+scale; `decompress` restores float; the residual carries to the next step.
+The launcher wires this around the pod-axis mean; the unit test checks
+EF-SGD matches plain SGD to <1% on a quadratic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, error):
+    """-> (q_int8 tree, scales tree, new_error tree)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_e = gf - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    flat = jax.tree.map(one, grads, error)
+    q = jax.tree.map(lambda t: t[0], flat,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], flat,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    e = jax.tree.map(lambda t: t[2], flat,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, e
+
+
+def decompress(q, scales, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda qi, si: (qi.astype(jnp.float32) * si).astype(dtype), q, scales)
+
+
+def wire_bytes(tree) -> int:
+    """Bytes on the wire for a compressed gradient exchange."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

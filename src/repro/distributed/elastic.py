@@ -1,0 +1,58 @@
+"""Elastic scaling: reshard a checkpoint between mesh configurations.
+
+The stateless-launcher posture for node failures beyond checkpoint/restart:
+params and optimizer state are saved as full (unsharded) host arrays by
+the CheckpointManager; growing/shrinking the `data` (FSDP) axis — or
+changing the mesh shape entirely — is a matter of re-deriving the
+PartitionSpecs with the rules engine and re-placing the arrays.  This
+module provides the placement step plus a host-side plan describing
+exactly which byte ranges each device loads (what a restore server would
+serve at 1000-node scale, where no single host holds the full model).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.distributed import sharding
+
+
+def replace_onto_mesh(tree: Any, mesh) -> Any:
+    """Host pytree → device arrays sharded per the rules engine on `mesh`
+    (works for any mesh the dims divide — the divisibility guard falls
+    back to replication elsewhere)."""
+    specs = sharding.param_specs(jax.eval_shape(lambda: tree), mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, specs)
+
+
+def shard_plan(shape_tree: Any, mesh) -> dict[str, dict]:
+    """Host-side resharding plan: for each leaf, the PartitionSpec and the
+    per-device shard shape under `mesh` — lets an orchestrator compute
+    which checkpoint byte-ranges each rank must fetch after an elastic
+    resize, without touching devices."""
+    specs = sharding.param_specs(shape_tree, mesh)
+    plan = {}
+
+    def visit(path, leaf, spec):
+        name = "/".join(str(getattr(e, "key", getattr(e, "name", e)))
+                        for e in path)
+        pspec = spec.spec
+        shard_shape = list(leaf.shape)
+        for dim, ax in enumerate(tuple(pspec)):
+            if ax is None:
+                continue
+            size = (mesh.shape[ax] if isinstance(ax, str)
+                    else int(np.prod([mesh.shape[a] for a in ax])))
+            shard_shape[dim] //= size
+        plan[name] = {
+            "global_shape": list(leaf.shape),
+            "spec": str(pspec),
+            "shard_shape": shard_shape,
+            "bytes_per_shard": int(np.prod(shard_shape))
+            * np.dtype(leaf.dtype).itemsize,
+        }
+
+    jax.tree_util.tree_map_with_path(visit, shape_tree, specs)
+    return plan

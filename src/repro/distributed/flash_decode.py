@@ -1,0 +1,124 @@
+"""Flash-decode: single-token attention against a SEQUENCE-SHARDED KV
+cache without gathering the cache (§Perf; the principled fix for archs
+whose KV heads cannot shard the TP axis, e.g. gemma3's 8 query heads).
+
+Each shard computes partial attention over its local KV chunk, then the
+shards combine with the numerically-stable log-sum-exp merge:
+
+    m  = pmax(m_loc)                 (per (batch, head))
+    num = psum(exp(m_loc − m) · acc_loc)
+    den = psum(exp(m_loc − m) · den_loc)
+    out = num / den
+
+Wire cost per layer: 2·B·H·hd·f32 (+ B·H) — hundreds of KB, vs. the
+multi-GB cache gather XLA otherwise inserts.  Exact (same softmax).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def local_partial_attention(q, k_loc, v_loc, valid_loc, softcap=None):
+    """q: (B, G, Hg, hd) f32; k/v_loc: (B, S_loc, G, hd); valid_loc:
+    (S_loc,) bool mask for positions < length within this shard.
+    Returns (acc (B,G,Hg,hd), m (B,G,Hg), den (B,G,Hg))."""
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bghd,bkgd->bghk", q, k_loc.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid_loc[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid_loc[None, None, None, :], p, 0.0)
+    acc = jnp.einsum("bghk,bkgd->bghd", p, v_loc.astype(jnp.float32))
+    den = p.sum(axis=-1)
+    return acc, m, den
+
+
+def merge_partials(acc, m, den, axis_names):
+    """Cross-shard log-sum-exp merge over `axis_names` (psum/pmax)."""
+    m_glob = jax.lax.pmax(m, axis_names)
+    scale = jnp.exp(m - m_glob)
+    num = jax.lax.psum(acc * scale[..., None], axis_names)
+    d = jax.lax.psum(den * scale, axis_names)
+    return num / jnp.maximum(d[..., None], 1e-30)
+
+
+def make_flash_decode(mesh, seq_axis: str | tuple, B: int, S: int,
+                      G: int, Hg: int, hd: int, softcap=None):
+    """Builds a shard_map'd decode-attention: cache stays sharded on its
+    sequence dim over `seq_axis`; only (B,G,Hg,hd)-sized partials move."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = seq_axis if isinstance(seq_axis, tuple) else (seq_axis,)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    S_loc = S // n_shards
+    spec_cache = P(None, axes if len(axes) > 1 else axes[0], None, None)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), spec_cache, spec_cache, P()),
+        out_specs=P(),
+        check_vma=False)
+    def flash(q, k, v, length):
+        idx = jax.lax.axis_index(axes[0])
+        if len(axes) > 1:
+            for a in axes[1:]:
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        base = idx * S_loc
+        kpos = base + jnp.arange(S_loc)
+        valid = kpos < length
+        acc, m, den = local_partial_attention(q, k, v, valid, softcap)
+        return merge_partials(acc, m, den, axes)
+
+    return flash
+
+
+# ---------------------------------------------------------------------------
+# Standalone production-mesh lowering proof (gemma3-shaped decode layer):
+#   XLA_FLAGS="--xla_force_host_platform_device_count=512" \
+#   PYTHONPATH=src python -m repro.distributed.flash_decode
+# ---------------------------------------------------------------------------
+
+def _main() -> None:   # pragma: no cover (driver)
+    import json
+    import jax
+    from jax.sharding import AxisType
+
+    mesh = jax.make_mesh((16, 16), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    # gemma3-4b decode_32k shapes: B=128, S=32768, G=4 kv, Hg=2, hd=256
+    B, S, G, Hg, hd = 128, 32768, 4, 2, 256
+    flash = make_flash_decode(mesh, ("data", "model"), B, S, G, Hg, hd,
+                              softcap=50.0)
+    specs = (jax.ShapeDtypeStruct((B, G, Hg, hd), jnp.float32),
+             jax.ShapeDtypeStruct((B, S, G, hd), jnp.bfloat16),
+             jax.ShapeDtypeStruct((B, S, G, hd), jnp.bfloat16),
+             jax.ShapeDtypeStruct((), jnp.int32))
+    compiled = jax.jit(flash).lower(*specs).compile()
+    from repro.launch.dryrun import parse_collectives
+    census = parse_collectives(compiled.as_text())
+    out = {"kind": "flash_decode_gemma3_layer", "mesh": "16x16",
+           "peak_bytes_per_dev": int(
+               compiled.memory_analysis().peak_memory_in_bytes),
+           "collectives": census, "ok": True}
+    print(json.dumps(out, indent=1))
+    with open("results/flash_decode_gemma3.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":   # pragma: no cover
+    import os as _os
+    assert "512" in _os.environ.get("XLA_FLAGS", ""), \
+        "run with XLA_FLAGS=--xla_force_host_platform_device_count=512"
+    _main()

@@ -1,0 +1,186 @@
+"""Sharding rules: param/state/batch PartitionSpecs for the production mesh.
+
+Axis roles (DESIGN.md §5):
+  data  — FSDP (params+opt sharded), batch, sequence (SP fallback)
+  model — TP (heads / ffn hidden / vocab), EP (experts), KV-cache seq
+  pod   — DP across pods (params replicated, gradients all-reduced)
+
+Rules are name-based with a divisibility guard: a dim is only sharded if
+it divides by the axis size, otherwise that dim falls back to replication
+(this is what makes whisper-base's 51865 vocab lower cleanly on the same
+rules that shard kimi's 163840).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name -> spec template for the *trailing* dims (leading stack dims -> None)
+_RULES_2D: dict[str, tuple] = {
+    # (in, out)-style projections: FSDP on in-dim, TP on out-dim
+    "wq": ("data", "model"), "wk": ("data", "model"),
+    "wv": ("data", "model"), "wg": ("data", "model"),
+    "wr": ("data", "model"), "up": ("data", "model"),
+    "gate": ("data", "model"), "ck": ("data", "model"),
+    "cr": ("data", "model"), "w_in": ("data", "model"),
+    "wA": ("data", "model"),
+    # output projections: TP on in-dim, FSDP on out-dim
+    "wo": ("model", "data"), "down": ("model", "data"),
+    "cv": ("model", "data"), "w_out": ("model", "data"),
+    "wB": ("model", "data"),
+    # embeddings / heads
+    "embed": ("model", "data"), "head": ("data", "model"),
+    "pos_dec": (None, "data"),
+    "router": ("data", None),
+    "conv_w": (None, "model"),
+}
+_RULES_3D: dict[str, tuple] = {
+    "w_gate": ("model", "data", None),      # (E, D, F): EP × FSDP
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guard(spec: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Drop axes that don't divide the corresponding dim."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0
+                   else None)
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return entry.name
+    return ""
+
+
+def param_spec_for(name: str, shape: tuple, mesh: Mesh) -> P:
+    if len(shape) <= 1:
+        return P()
+    # strip leading stack dims (layer-scan) so rules match trailing dims
+    if name in _RULES_3D and len(shape) >= 3:
+        tmpl = _RULES_3D[name]
+        lead = (None,) * (len(shape) - 3)
+        return _guard(lead + tuple(tmpl), shape, mesh)
+    if name in _RULES_2D:
+        tmpl = _RULES_2D[name]
+        lead = (None,) * (len(shape) - 2)
+        return _guard(lead + tuple(tmpl), shape, mesh)
+    # default: try to FSDP the largest trailing dim
+    spec = [None] * len(shape)
+    order = np.argsort(shape[-2:])[::-1]
+    axes = ["data", "model"]
+    for i, di in enumerate(order):
+        dim_idx = len(shape) - 2 + di
+        if shape[dim_idx] % _axis_size(mesh, axes[i]) == 0:
+            spec[dim_idx] = axes[i]
+    return P(*spec)
+
+
+def param_specs(shape_tree: Any, mesh: Mesh) -> Any:
+    def per_leaf(path, leaf):
+        return NamedSharding(mesh, param_spec_for(
+            _leaf_name(path), tuple(leaf.shape), mesh))
+    return jax.tree_util.tree_map_with_path(per_leaf, shape_tree)
+
+
+# ---------------------------------------------------------------------------
+# Decode-state / cache specs
+# ---------------------------------------------------------------------------
+
+def cache_spec(shape: tuple, mesh: Mesh, batch_dim: int = 1,
+               seq_dim: int = 2, kv_dim: int | None = 3) -> P:
+    """(…, B, S, K, hd)-style caches: batch→data, kv-heads→model if they
+    divide, else the sequence dim takes the leftover axes (the SP/KV-seq
+    fallback that keeps 61-layer × 32k × 128-batch caches on-chip)."""
+    spec: list = [None] * len(shape)
+    data_ok = shape[batch_dim] % _axis_size(mesh, "data") == 0
+    if data_ok:
+        spec[batch_dim] = "data"
+    kv_ok = (kv_dim is not None and kv_dim < len(shape)
+             and shape[kv_dim] % _axis_size(mesh, "model") == 0)
+    if kv_ok:
+        spec[kv_dim] = "model"
+    else:
+        leftover = ("model",) if data_ok else ("data", "model")
+        if seq_dim is not None and \
+                shape[seq_dim] % _axis_size(mesh, leftover) == 0:
+            spec[seq_dim] = leftover if len(leftover) > 1 else leftover[0]
+    return P(*spec)
+
+
+def state_specs(state_shapes: Any, mesh: Mesh) -> Any:
+    """Specs for decode-state pytrees (StackedCache / RWKVState /
+    MambaState / WhisperCache) by rank heuristics."""
+    def per_leaf(path, leaf):
+        shape = tuple(leaf.shape)
+        name = _leaf_name(path)
+        if len(shape) == 5:              # (L, B, S|H, K|hd, hd) caches/state
+            if name in ("k", "v", "attn_k", "attn_v", "k_scale", "v_scale"):
+                return NamedSharding(mesh, cache_spec(shape, mesh))
+            # rwkv wkv state (L, B, H, hd, hd) / mamba h (L, B, hm, P, N)
+            spec = [None] * 5
+            if shape[1] % _axis_size(mesh, "data") == 0:
+                spec[1] = "data"
+            if shape[2] % _axis_size(mesh, "model") == 0:
+                spec[2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if len(shape) == 4:              # (L, B, x, C) conv tails etc.
+            spec = [None] * 4
+            if shape[1] % _axis_size(mesh, "data") == 0:
+                spec[1] = "data"
+            if shape[-1] % _axis_size(mesh, "model") == 0:
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if len(shape) == 3:              # (L, B, D) shift states
+            spec = [None] * 3
+            if shape[1] % _axis_size(mesh, "data") == 0:
+                spec[1] = "data"
+            if shape[-1] % _axis_size(mesh, "model") == 0:
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(per_leaf, state_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_specs(batch_shapes: Any, mesh: Mesh) -> Any:
+    ba = batch_axes(mesh)
+    basz = _axis_size(mesh, tuple(ba))
+
+    def per_leaf(leaf):
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        if shape and shape[0] % basz == 0:
+            spec[0] = ba if len(ba) > 1 else ba[0]
+        elif shape and shape[0] % _axis_size(mesh, "data") == 0:
+            spec[0] = "data"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(per_leaf, batch_shapes)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,85 @@
+"""jit'd public wrappers around the Pallas kernels: padding, K-chunking,
+batch flattening, and drop-in integration points for the crypto layer.
+
+`interpret` defaults to True (this container is CPU); on real TPU pass
+interpret=False — the kernels are written against BlockSpec VMEM tiling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.bigint import Modulus
+from repro.crypto.ring import R64
+from repro.kernels import montmul as montmul_k
+from repro.kernels import ring_matmul as ringmm_k
+
+_U32 = jnp.uint32
+
+
+def montmul(a: jnp.ndarray, b: jnp.ndarray, mod: Modulus, *,
+            tile_b: int = montmul_k.DEFAULT_TILE_B,
+            interpret: bool = True) -> jnp.ndarray:
+    """Batched Montgomery product via the Pallas kernel.  Accepts any
+    leading batch shape; broadcasts a against b; pads to the tile."""
+    a, b = jnp.broadcast_arrays(a.astype(_U32), b.astype(_U32))
+    bshape = a.shape[:-1]
+    L = mod.L
+    flat = int(np.prod(bshape)) if bshape else 1
+    a2 = a.reshape(flat, L)
+    b2 = b.reshape(flat, L)
+    pad = (-flat) % tile_b
+    if pad:
+        a2 = jnp.concatenate([a2, jnp.zeros((pad, L), _U32)], 0)
+        b2 = jnp.concatenate([b2, jnp.zeros((pad, L), _U32)], 0)
+    out = montmul_k.montmul_tiled(
+        a2, b2, jnp.asarray(mod.limbs, _U32),
+        n0inv=mod.n0inv, L=L, tile_b=tile_b, interpret=interpret)
+    return out[:flat].reshape(bshape + (L,))
+
+
+def mont_exp_bits(base: jnp.ndarray, bits: jnp.ndarray, mod: Modulus, *,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Kernel-backed constant-time ladder (same contract as
+    bigint.mont_exp_bits)."""
+    bshape = jnp.broadcast_shapes(base.shape[:-1], bits.shape[:-1])
+    base = jnp.broadcast_to(base, bshape + base.shape[-1:])
+    bits = jnp.broadcast_to(bits.astype(_U32), bshape + bits.shape[-1:])
+    acc0 = jnp.broadcast_to(jnp.asarray(mod.r1, _U32), base.shape)
+
+    def step(acc, bit):
+        acc = montmul(acc, acc, mod, interpret=interpret)
+        mul = montmul(acc, base, mod, interpret=interpret)
+        return jnp.where(bit[..., None] == 1, mul, acc), None
+
+    acc, _ = jax.lax.scan(step, acc0, jnp.moveaxis(bits, -1, 0))
+    return acc
+
+
+def ring_matmul(a: R64, b: R64, *, tm: int = ringmm_k.DEFAULT_TM,
+                tn: int = ringmm_k.DEFAULT_TN,
+                interpret: bool = True) -> R64:
+    """(M, K) @ (K, N) over Z_2^64 via the limb-MXU kernel.  Pads M/N to
+    tiles and chunks K at the exactness bound."""
+    M, K = a.lo.shape
+    N = b.lo.shape[1]
+    padM = (-M) % tm
+    padN = (-N) % tn
+
+    def padded(x, pr, pc):
+        return jnp.pad(x, ((0, pr), (0, pc)))
+
+    out_hi = jnp.zeros((M + padM, N + padN), _U32)
+    out_lo = jnp.zeros_like(out_hi)
+    for k0 in range(0, K, ringmm_k.MAX_K_EXACT):
+        k1 = min(K, k0 + ringmm_k.MAX_K_EXACT)
+        oh, ol = ringmm_k.ring_matmul_tiled(
+            padded(a.hi[:, k0:k1], padM, 0), padded(a.lo[:, k0:k1], padM, 0),
+            padded(b.hi[k0:k1, :], 0, padN), padded(b.lo[k0:k1, :], 0, padN),
+            tm=tm, tn=tn, interpret=interpret)
+        new_lo = out_lo + ol
+        carry = (new_lo < out_lo).astype(_U32)
+        out_hi = out_hi + oh + carry
+        out_lo = new_lo
+    return R64(out_hi[:M, :N], out_lo[:M, :N])

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto import bigint, ring
+from repro.crypto.bigint import Modulus
+from repro.crypto.ring import R64
+
+
+def montmul_ref(a: jnp.ndarray, b: jnp.ndarray, mod: Modulus) -> jnp.ndarray:
+    """Reference Montgomery product: the library's vectorized limb code
+    (itself validated against python ints in tests/test_crypto_bigint)."""
+    return bigint.mont_mul(a, b, mod)
+
+
+def ring_matmul_ref(a: R64, b: R64) -> R64:
+    """(M, K) @ (K, N) over Z_2^64 with scalar ring ops (memory-light
+    scan over K)."""
+    M, K = a.lo.shape
+    N = b.lo.shape[1]
+    acc0 = ring.zeros((M, N))
+
+    def body(k, acc):
+        ak = R64(jax.lax.dynamic_slice_in_dim(a.hi, k, 1, 1),
+                 jax.lax.dynamic_slice_in_dim(a.lo, k, 1, 1))     # (M, 1)
+        bk = R64(jax.lax.dynamic_slice_in_dim(b.hi, k, 1, 0),
+                 jax.lax.dynamic_slice_in_dim(b.lo, k, 1, 0))     # (1, N)
+        return ring.add(acc, ring.mul(ak, bk))
+
+    return jax.lax.fori_loop(0, K, body, acc0)

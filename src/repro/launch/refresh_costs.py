@@ -1,0 +1,69 @@
+"""Recompute the analytic cost-model fields of existing dry-run JSONs in
+place (compile artifacts — memory analysis, HLO census — are reused; only
+the costmodel-derived roofline terms are refreshed).  Used when the cost
+model is refined after an expensive compile sweep.
+
+  PYTHONPATH=src python -m repro.launch.refresh_costs results/dryrun ...
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+from repro.configs import registry
+from repro.configs.base import SHAPE_CELLS
+from repro.launch import costmodel
+from repro.launch.dryrun import _apply_overrides, roofline_terms
+
+
+class _MeshShim:
+    def __init__(self, mesh_tag: str):
+        dims = tuple(int(x) for x in mesh_tag.split("x"))
+        names = ("data", "model") if len(dims) == 2 else \
+            ("pod", "data", "model")
+        self.axis_names = names
+        self.devices = type("D", (), {})()
+        self.devices.shape = dims
+        self.devices.size = 1
+        for d in dims:
+            self.devices.size *= d
+
+
+def refresh(path: str) -> bool:
+    with open(path) as f:
+        d = json.load(f)
+    if not d.get("ok") or "cell" not in d:
+        return False
+    cfg = _apply_overrides(registry.get_config(d["arch"]),
+                           d.get("overrides"))
+    cell = SHAPE_CELLS[d["cell"]]
+    mesh = _MeshShim(d["mesh"])
+    costs = costmodel.cell_costs(cfg, cell, mesh)
+    d["costmodel"] = costs
+    d["flops_per_dev"] = costs["flops_per_dev"]
+    d["hbm_bytes_per_dev"] = costs["hbm_bytes_per_dev"]
+    d["coll_bytes_per_dev"] = costs["coll_bytes_per_dev"]
+    d.update(roofline_terms(costs["flops_per_dev"],
+                            costs["hbm_bytes_per_dev"],
+                            costs["coll_bytes_per_dev"]))
+    d["useful_flops_ratio"] = (d["model_flops_total"]
+                               / (costs["flops_per_dev"]
+                                  * d["n_devices"])) \
+        if costs["flops_per_dev"] else 0.0
+    with open(path, "w") as f:
+        json.dump(d, f, indent=1)
+    return True
+
+
+def main() -> None:
+    n = 0
+    for pattern in sys.argv[1:] or ["results/dryrun"]:
+        for path in sorted(glob.glob(pattern + "/*.json")):
+            if refresh(path):
+                n += 1
+    print(f"refreshed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Step builders: assemble (step_fn, arg ShapeDtypeStructs, in/out
+shardings) for every (arch × shape-cell × mesh) — the dry-run contract
+and the train/serve drivers both build on this."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, ShapeCell, TrainConfig
+from repro.distributed import sharding
+from repro.models import registry as models
+from repro.models import mamba2, rwkv6, transformer, whisper
+from repro.optim import clip_by_global_norm, make_optimizer
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any                   # the python step function
+    args: tuple               # ShapeDtypeStructs (lower(*args))
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+
+
+def make_train_step(api: models.ModelAPI, tc: TrainConfig):
+    opt = make_optimizer(api.cfg.optimizer)
+
+    def _loss_and_grads(params, batch):
+        if tc.microbatch is None:
+            return jax.value_and_grad(api.train_loss)(params, batch)
+        # gradient accumulation: scan over microbatches (peak activation
+        # memory ÷ n_micro; equal-size chunks → mean of means is exact)
+        B = jax.tree.leaves(batch)[0].shape[0]
+        assert B % tc.microbatch == 0, "batch % microbatch != 0"
+        n_micro = B // tc.microbatch
+        chunked = jax.tree.map(
+            lambda x: x.reshape((n_micro, tc.microbatch) + x.shape[1:]),
+            batch)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(api.train_loss)(params, mb)
+            return (loss_acc + loss,
+                    jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 grad_acc, grads)), None
+
+        zero = (jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+        (loss_sum, grad_sum), _ = jax.lax.scan(body, zero, chunked)
+        scale = 1.0 / n_micro
+        return loss_sum * scale, jax.tree.map(
+            lambda g: g * scale, grad_sum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = _loss_and_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        new_params, new_opt = opt.update(grads, opt_state, params, tc.lr)
+        return loss, gnorm, new_params, new_opt
+
+    return opt, train_step
+
+
+def make_prefill_step(api: models.ModelAPI, max_len: int):
+    cfg = api.cfg
+
+    def prefill_step(params, batch):
+        if cfg.family in ("dense", "moe", "vlm"):
+            return transformer.prefill(
+                params, cfg, batch["tokens"], max_len,
+                vision_embeds=batch.get("vision_embeds"))
+        if cfg.family == "ssm":
+            logits, state = rwkv6.forward(params, cfg, batch["tokens"])
+            return logits[:, -1], state
+        if cfg.family == "hybrid":
+            logits, state = mamba2.forward(params, cfg, batch["tokens"],
+                                           max_len=max_len)
+            return logits[:, -1], state
+        if cfg.family == "audio":
+            enc_out = whisper.encode(params, cfg, batch["frames"])
+            logits, cache = whisper.decode(params, cfg, batch["tokens"],
+                                           enc_out, max_len=max_len)
+            return logits[:, -1], cache
+        raise ValueError(cfg.family)
+
+    return prefill_step
+
+
+def make_decode_step(api: models.ModelAPI):
+    cfg = api.cfg
+
+    def decode_step(params, state, batch):
+        extras = {}
+        if cfg.family == "audio":
+            extras["enc_out"] = batch["enc_out"]
+        return api.decode_step(params, state, batch["token"], **extras)
+
+    return decode_step
+
+
+def build_step_bundle(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                      tc: TrainConfig | None = None) -> StepBundle:
+    api = models.build(cfg)
+    tc = tc or TrainConfig()
+    key = jax.random.key(0)
+    params_shapes = jax.eval_shape(api.init_params, key)
+    pspecs = sharding.param_specs(params_shapes, mesh)
+    batch_shapes = models.input_specs(cfg, cell)
+    bspecs = sharding.batch_specs(batch_shapes, mesh)
+    rep = sharding.replicated(mesh)
+
+    if cell.kind == "train":
+        opt, step = make_train_step(api, tc)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        ospecs = sharding.param_specs(opt_shapes, mesh) \
+            if jax.tree.leaves(opt_shapes) else jax.tree.map(
+                lambda _: rep, opt_shapes)
+        # scalars inside adamw state (t) → replicated
+        ospecs = jax.tree.map(
+            lambda sh, sp: rep if sh.ndim == 0 else sp, opt_shapes, ospecs)
+        return StepBundle(
+            fn=step,
+            args=(params_shapes, opt_shapes, batch_shapes),
+            in_shardings=(pspecs, ospecs, bspecs),
+            out_shardings=(rep, rep, pspecs, ospecs),
+            donate=(0, 1),
+        )
+
+    if cell.kind == "prefill":
+        step = make_prefill_step(api, max_len=cell.seq_len)
+        state_shapes = jax.eval_shape(step, params_shapes, batch_shapes)[1]
+        sspecs = sharding.state_specs(state_shapes, mesh)
+        logits_shape = jax.eval_shape(step, params_shapes, batch_shapes)[0]
+        lspec = sharding.batch_specs(logits_shape, mesh)
+        return StepBundle(
+            fn=step,
+            args=(params_shapes, batch_shapes),
+            in_shardings=(pspecs, bspecs),
+            out_shardings=(lspec, sspecs),
+        )
+
+    # decode
+    step = make_decode_step(api)
+    state_shapes = jax.eval_shape(
+        lambda: api.init_decode_state(cell.global_batch, cell.seq_len))
+    sspecs = sharding.state_specs(state_shapes, mesh)
+    out_shapes = jax.eval_shape(step, params_shapes, state_shapes,
+                                batch_shapes)
+    lspec = sharding.batch_specs(out_shapes[0], mesh)
+    return StepBundle(
+        fn=step,
+        args=(params_shapes, state_shapes, batch_shapes),
+        in_shardings=(pspecs, sspecs, bspecs),
+        out_shardings=(lspec, sspecs),
+        donate=(1,),
+    )

@@ -1,0 +1,1 @@
+"""The 10 assigned architectures as pure-JAX functional models."""

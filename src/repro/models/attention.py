@@ -1,0 +1,226 @@
+"""GQA attention: full, sliding-window, blockwise (memory-efficient) and
+single-token decode against a KV cache.
+
+Blockwise attention (lax.scan over KV chunks with an online softmax) keeps
+the S×S score matrix out of memory for the 32k-prefill cells — the
+pure-JAX analogue of flash attention, chosen deliberately so the dry-run's
+`cost_analysis()` sees real FLOPs (a Pallas kernel would hide them behind
+a custom call).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    causal: bool = True
+    window: Optional[int] = None         # sliding window (None = full)
+    softcap: Optional[float] = None
+    norm_eps: float = 1e-6
+    kv_repeat: int = 1                   # KV-head replication (§Perf knob)
+
+    @property
+    def kv_eff(self) -> int:
+        eff = self.n_kv_heads * self.kv_repeat
+        if eff > self.n_heads:
+            raise ValueError(
+                f"kv_head_replication too large: {eff} KV > {self.n_heads} "
+                "query heads (max replication = n_heads // n_kv_heads)")
+        return eff
+
+
+def init(key, d_model: int, spec: AttnSpec, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    H, K, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    p = {
+        "wq": layers.dense_init(ks[0], d_model, H * hd, dtype),
+        "wk": layers.dense_init(ks[1], d_model, K * hd, dtype),
+        "wv": layers.dense_init(ks[2], d_model, K * hd, dtype),
+        "wo": layers.dense_init(ks[3], H * hd, d_model, dtype),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, spec: AttnSpec, positions):
+    B, S, _ = x.shape
+    H, K, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    if spec.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], spec.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], spec.norm_eps)
+    if spec.rope_theta is not None:     # theta may be traced (per-layer)
+        q = layers.apply_rope(q, positions, spec.rope_theta)
+        k = layers.apply_rope(k, positions, spec.rope_theta)
+    if spec.kv_repeat > 1:              # duplicate KV heads (exact; lets
+        k = jnp.repeat(k, spec.kv_repeat, axis=2)   # the cache shard on
+        v = jnp.repeat(v, spec.kv_repeat, axis=2)   # the head dim)
+    return q, k, v
+
+
+def _scores_to_out(scores, v_g, softcap):
+    # scores: (B, G, Hg, Sq, Sk) f32; v_g: (B, Sk, G, hd)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bghqk,bkgd->bqghd", probs,
+                      v_g.astype(jnp.float32))
+
+
+def _grouped(q, k, v, n_kv):
+    """Reshape q to (B, S, G, Hg, hd) grouping query heads per KV head."""
+    B, S, H, hd = q.shape
+    G = n_kv
+    return q.reshape(B, S, G, H // G, hd), k, v
+
+
+def full_attention(q, k, v, spec: AttnSpec, q_offset: int = 0):
+    """Materialized-scores GQA (fine for ≤ 8k sequences)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    G = spec.kv_eff
+    qg, k, v = _grouped(q, k, v, G)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bqghd,bkgd->bghqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if spec.causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if spec.window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - spec.window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    out = _scores_to_out(scores, v, spec.softcap)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, spec: AttnSpec, kv_block: int = 1024):
+    """Online-softmax attention, scanning KV blocks (O(S·kv_block) memory).
+    Causal + optional sliding window."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    assert Sk % kv_block == 0, "pad KV to a block multiple"
+    G = spec.kv_eff
+    Hg = H // G
+    qg = q.reshape(B, Sq, G, Hg, hd).astype(jnp.float32)
+    scale = 1.0 / np.sqrt(hd)
+    nblk = Sk // kv_block
+    kb = jnp.moveaxis(k.reshape(B, nblk, kv_block, G, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nblk, kv_block, G, hd), 1, 0)
+    qpos = jnp.arange(Sq)
+
+    def step(carry, xs):
+        acc, m, denom, blk = carry
+        kblk, vblk = xs
+        kpos = blk * kv_block + jnp.arange(kv_block)
+        s = jnp.einsum("bqghd,bkgd->bghqk", qg, kblk.astype(jnp.float32)
+                       ) * scale
+        if spec.softcap:
+            s = jnp.tanh(s / spec.softcap) * spec.softcap
+        mask = jnp.ones((Sq, kv_block), bool)
+        if spec.causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if spec.window is not None:
+            mask &= kpos[None, :] > (qpos[:, None] - spec.window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bghqk,bkgd->bghqd", p, vblk.astype(jnp.float32))
+        denom = denom * alpha + p.sum(axis=-1)
+        return (acc, m_new, denom, blk + 1), None
+
+    acc0 = jnp.zeros((B, G, Hg, Sq, hd), jnp.float32)
+    m0 = jnp.full((B, G, Hg, Sq), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, G, Hg, Sq), jnp.float32)
+    (acc, _, denom, _), _ = jax.lax.scan(step, (acc0, m0, d0, 0), (kb, vb))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S_max, K, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray     # () int32 — filled prefix
+
+
+def decode_attention(q, cache: KVCache, spec: AttnSpec):
+    """One-token query (B, 1, H, hd) against the cache."""
+    B, _, H, hd = q.shape
+    G = spec.kv_eff
+    qg = q.reshape(B, G, H // G, hd).astype(jnp.float32)
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bghd,bkgd->bghk", qg, cache.k.astype(jnp.float32)
+                   ) * scale
+    if spec.softcap:
+        s = jnp.tanh(s / spec.softcap) * spec.softcap
+    kpos = jnp.arange(cache.k.shape[1])
+    valid = kpos < cache.length
+    if spec.window is not None:
+        valid &= kpos > (cache.length - 1 - spec.window)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bghk,bkgd->bghd", p, cache.v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def apply(p, x, spec: AttnSpec, positions=None, cache: KVCache | None = None,
+          kv_block: int | None = None, cross_kv=None):
+    """Unified entry: training/prefill (cache=None → returns (out, new_kv))
+    or decode (cache given → uses cache, returns (out, updated cache)).
+    cross_kv: precomputed (k, v) for encoder-decoder cross-attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        base = cache.length if cache is not None else 0
+        positions = jnp.broadcast_to(jnp.arange(S) + base, (B, S))
+    if cross_kv is not None:
+        q = (x @ p["wq"]).reshape(B, S, spec.n_heads, spec.head_dim)
+        k, v = cross_kv
+        out = full_attention(q, k, v, dataclasses.replace(spec, causal=False),
+                             q_offset=0)
+        return out.reshape(B, S, -1) @ p["wo"], None
+    q, k, v = _project_qkv(p, x, spec, positions)
+    if cache is not None:
+        if S == 1:   # decode
+            newk = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+            newv = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+            new_cache = KVCache(newk, newv, cache.length + 1)
+            out = decode_attention(q, new_cache, spec)
+        else:        # chunked prefill into cache
+            newk = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+            newv = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+            new_cache = KVCache(newk, newv, cache.length + S)
+            out = full_attention(q, newk[:, :], newv[:, :], spec,
+                                 q_offset=0)
+        return out.reshape(B, S, -1) @ p["wo"], new_cache
+    if kv_block and S > kv_block:
+        out = blockwise_attention(q, k, v, spec, kv_block)
+    else:
+        out = full_attention(q, k, v, spec)
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)

@@ -1,0 +1,126 @@
+"""Shared neural building blocks (pure-functional, init/apply style).
+
+Conventions:
+* params are plain nested dicts of jnp arrays (pytree-friendly for pjit),
+* compute dtype comes from the config (`bf16` default), params stored in
+  the same dtype; softmax/norm statistics and the loss run in f32,
+* every init takes an explicit PRNG key chain.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, fan_in: int, fan_out: int, dtype,
+               scale: float | None = None) -> jnp.ndarray:
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, (fan_in, fan_out),
+                                        jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2, 2, (vocab, d), jnp.float32)
+            ).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (+ simple M-RoPE-compatible section stub)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta) -> jnp.ndarray:
+    """theta may be a python float or a traced scalar (per-layer thetas
+    ride through lax.scan in gemma3's 5:1 local:global pattern)."""
+    expo = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return jnp.asarray(theta, jnp.float32) ** (-expo)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta
+               ) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                 # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (llama-style) / plain MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, f, dtype),
+         "down": dense_init(ks[1], f, d, dtype)}
+    if act == "silu":             # gated variant
+        p["gate"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = x @ p["up"]
+    if "gate" in p:
+        h = h * act_fn(act)(x @ p["gate"])
+    else:
+        h = act_fn(act)(h)
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def lm_head_apply(embed: jnp.ndarray, head: jnp.ndarray | None,
+                  x: jnp.ndarray, softcap: float | None) -> jnp.ndarray:
+    w = embed.T if head is None else head
+    logits = (x @ w).astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits (…, V) f32, labels (…) int32 — mean NLL (ignore label < 0)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0),
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,239 @@
+"""Mamba2 (SSD) blocks + the Zamba2 hybrid stack (arXiv:2411.15242).
+
+Mamba2 core: per-head scalar decay a_t = exp(dt·A), state (heads, P, N):
+    h_t = a_t · h_{t-1} + dt · x_t ⊗ B_t          (outer over state dim N)
+    y_t = h_t · C_t + D ⊙ x_t
+with a short causal conv on the (x, B, C) stream and a silu(z) output gate.
+
+Zamba2 layout: `n_layers` Mamba2 blocks; every `shared_attn_every` blocks
+a *weight-shared* full transformer block (MHA kv=heads + MLP) is applied —
+the paper's trick for attention quality at SSM cost.  Two shared blocks
+alternate, as in Zamba2-7B.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers
+from repro.models.attention import AttnSpec, KVCache
+
+P_HEAD = 64      # mamba2 head channel dim
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray         # (L, B, H_m, P, N) ssm state
+    conv: jnp.ndarray      # (L, B, conv_w-1, conv_dim) conv tail
+    attn_k: jnp.ndarray    # (n_shared, B, S_max, H, hd) shared-attn cache
+    attn_v: jnp.ndarray
+    length: jnp.ndarray
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    n_heads_m = d_inner // P_HEAD
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    return d_inner, n_heads_m, N, conv_dim
+
+
+def _mamba_init(cfg: ModelConfig, key) -> dict:
+    dt = layers.dtype_of(cfg)
+    d = cfg.d_model
+    d_inner, hm, N, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "w_in": layers.dense_init(ks[0], d, d_inner + conv_dim + hm, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dt),
+        "A_log": jnp.asarray(np.log(np.linspace(1.0, 16.0, hm)), jnp.float32),
+        "dt_bias": jnp.zeros((hm,), jnp.float32),
+        "D": jnp.ones((hm,), jnp.float32),
+        "w_out": layers.dense_init(ks[2], d_inner, d, dt),
+        "gn": jnp.ones((d_inner,), dt),
+    }
+
+
+def _shared_block_init(cfg: ModelConfig, key) -> dict:
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    spec = _shared_spec(cfg)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "attn": attention.init(ks[0], cfg.d_model, spec, dt),
+        "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def _shared_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+                    causal=True, norm_eps=cfg.norm_eps)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = layers.dtype_of(cfg)
+    k_emb, k_head, k_layers, k_sh = jax.random.split(key, 4)
+    stacked = jax.vmap(lambda k: _mamba_init(cfg, k))(
+        jax.random.split(k_layers, cfg.n_layers))
+    shared = [_shared_block_init(cfg, k) for k in jax.random.split(k_sh, 2)]
+    return {
+        "embed": layers.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "head": layers.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt),
+        "layers": stacked,
+        "shared": shared,
+    }
+
+
+def _causal_conv(x, w, tail):
+    """x: (B, T, C); w: (K, C); tail: (B, K-1, C) from previous chunk."""
+    K = w.shape[0]
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_tail = xp[:, -(K - 1):] if K > 1 else tail
+    return out, new_tail
+
+
+def _mamba_block(cfg, p, x, h0, conv_tail):
+    B, T, D = x.shape
+    d_inner, hm, N, conv_dim = _dims(cfg)
+    hin = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = hin @ p["w_in"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., -hm:]
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], conv_tail)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner].reshape(B, T, hm, P_HEAD).astype(jnp.float32)
+    Bt = xbc[..., d_inner:d_inner + N].astype(jnp.float32)      # (B, T, N)
+    Ct = xbc[..., d_inner + N:].astype(jnp.float32)             # (B, T, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, None] * dt)          # (B, T, hm)
+
+    def step(h, xs_t):
+        xt, bt, ct, at, dtt = xs_t
+        dx = (dtt[..., None] * xt)                               # (B,hm,P)
+        h = at[..., None, None] * h + dx[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs_seq = (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(Bt, 1, 0),
+              jnp.moveaxis(Ct, 1, 0), jnp.moveaxis(a, 1, 0),
+              jnp.moveaxis(dt, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs_seq)
+    y = jnp.moveaxis(ys, 0, 1)                                   # (B,T,hm,P)
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = y * p["gn"]
+    y = y * jax.nn.silu(z)
+    return x + y @ p["w_out"], h, new_tail
+
+
+def _apply_shared(cfg, p, x, cache: KVCache | None):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = attention.apply(p["attn"], h, _shared_spec(cfg),
+                                   cache=cache, kv_block=2048)
+    x = x + a
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + layers.mlp_apply(p["mlp"], h, cfg.act), new_cache
+
+
+def _shared_positions(cfg: ModelConfig) -> list[int]:
+    k = cfg.shared_attn_every
+    return [] if not k else list(range(k - 1, cfg.n_layers, k))
+
+
+def forward(params, cfg: ModelConfig, tokens,
+            state: MambaState | None = None, max_len: int | None = None):
+    """Groups of `shared_attn_every` scanned Mamba blocks interleaved with
+    the two alternating shared attention blocks (unrolled: ~13 groups)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, T, D = x.shape
+    d_inner, hm, N, conv_dim = _dims(cfg)
+    positions = _shared_positions(cfg)
+    n_sh_apps = len(positions)
+    decode = state is not None and T == 1
+    if state is None:
+        state = init_state(cfg, B, max_len or T)
+
+    # scan chunks of mamba layers between shared-attn applications
+    bounds = [0] + [p + 1 for p in positions]
+    if bounds[-1] != cfg.n_layers:
+        bounds.append(cfg.n_layers)
+    new_h, new_tails = [], []
+    attn_caches = []
+    app_i = 0
+    for gi in range(len(bounds) - 1):
+        lo, hi = bounds[gi], bounds[gi + 1]
+        seg = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        seg_h = state.h[lo:hi]
+        seg_tail = state.conv[lo:hi]
+
+        def body(x, xs):
+            p, h0, tail = xs
+            x, h, ntail = _mamba_block(cfg, p, x, h0, tail)
+            return x, (h, ntail)
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and not decode) else body
+        x, (hs, tails) = jax.lax.scan(body_fn, x, (seg, seg_h, seg_tail))
+        new_h.append(hs)
+        new_tails.append(tails)
+        if hi - 1 in positions:      # shared block after this group
+            shared_p = params["shared"][app_i % 2]
+            if decode:
+                lc = KVCache(state.attn_k[app_i], state.attn_v[app_i],
+                             state.length)
+                x, nc = _apply_shared(cfg, shared_p, x, lc)
+                attn_caches.append((nc.k, nc.v))
+            else:
+                x, kv = _apply_shared(cfg, shared_p, x, None)
+                if max_len is not None:
+                    k, v = kv
+                    pad = [(0, 0), (0, max(max_len - T, 0)), (0, 0), (0, 0)]
+                    attn_caches.append((jnp.pad(k, pad).astype(jnp.bfloat16),
+                                        jnp.pad(v, pad).astype(jnp.bfloat16)))
+            app_i += 1
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.lm_head_apply(params["embed"], params.get("head"), x,
+                                  cfg.logits_softcap)
+    h_all = jnp.concatenate(new_h, axis=0)
+    tails_all = jnp.concatenate(new_tails, axis=0)
+    if attn_caches:
+        ak = jnp.stack([c[0] for c in attn_caches])
+        av = jnp.stack([c[1] for c in attn_caches])
+    else:
+        ak, av = state.attn_k, state.attn_v
+    return logits, MambaState(h_all, tails_all, ak, av, state.length + T)
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    logits, _ = forward(params, cfg, batch["tokens"])
+    return layers.cross_entropy(logits, batch["labels"])
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> MambaState:
+    d_inner, hm, N, conv_dim = _dims(cfg)
+    n_sh = len(_shared_positions(cfg))
+    return MambaState(
+        h=jnp.zeros((cfg.n_layers, batch, hm, P_HEAD, N), jnp.float32),
+        conv=jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_dim),
+                       dtype),
+        attn_k=jnp.zeros((max(n_sh, 1), batch, max_len, cfg.n_kv_heads,
+                          cfg.hd), dtype),
+        attn_v=jnp.zeros((max(n_sh, 1), batch, max_len, cfg.n_kv_heads,
+                          cfg.hd), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, cfg: ModelConfig, state: MambaState, token):
+    logits, new_state = forward(params, cfg, token, state)
+    return logits[:, 0], new_state

@@ -1,0 +1,103 @@
+"""Uniform model API over the four families (dense/moe/vlm decoder, rwkv6,
+zamba2 hybrid, whisper enc-dec) — what the launcher, dry-run and smoke
+tests program against."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import mamba2, rwkv6, transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Any]
+    train_loss: Callable[[Any, dict], jnp.ndarray]
+    init_decode_state: Callable[[int, int], Any]
+    decode_step: Callable[..., tuple]      # (params, state, token, **extras)
+    prefill: Optional[Callable] = None
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda k: transformer.init_params(k, cfg),
+            train_loss=lambda p, b: transformer.train_loss(p, cfg, b),
+            init_decode_state=lambda b, s: transformer.init_cache(cfg, b, s),
+            decode_step=lambda p, st, tok, **kw: transformer.decode_step(
+                p, cfg, st, tok),
+            prefill=lambda p, tok, max_len, **kw: transformer.prefill(
+                p, cfg, tok, max_len, **kw),
+        )
+    if cfg.family == "ssm":
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda k: rwkv6.init_params(k, cfg),
+            train_loss=lambda p, b: rwkv6.train_loss(p, cfg, b),
+            init_decode_state=lambda b, s: rwkv6.init_state(cfg, b, s),
+            decode_step=lambda p, st, tok, **kw: rwkv6.decode_step(
+                p, cfg, st, tok),
+        )
+    if cfg.family == "hybrid":
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda k: mamba2.init_params(k, cfg),
+            train_loss=lambda p, b: mamba2.train_loss(p, cfg, b),
+            init_decode_state=lambda b, s: mamba2.init_state(cfg, b, s),
+            decode_step=lambda p, st, tok, **kw: mamba2.decode_step(
+                p, cfg, st, tok),
+        )
+    if cfg.family == "audio":
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda k: whisper.init_params(k, cfg),
+            train_loss=lambda p, b: whisper.train_loss(p, cfg, b),
+            init_decode_state=lambda b, s: whisper.init_cache(cfg, b, s),
+            decode_step=lambda p, st, tok, enc_out=None, **kw:
+                whisper.decode_step(p, cfg, st, tok, enc_out),
+        )
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for every model input (dry-run contract)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Returns {name: ShapeDtypeStruct} for the *data* inputs of the cell's
+    step function (params/opt/cache specs are built by the launcher from
+    jax.eval_shape)."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if cell.kind == "train":
+        batch = {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((B, cfg.vision_patches,
+                                           cfg.d_model), bf16)
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), bf16)
+        return batch
+    if cell.kind == "prefill":
+        batch = {"tokens": _sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((B, cfg.vision_patches,
+                                           cfg.d_model), bf16)
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), bf16)
+        return batch
+    # decode: one new token against a seq_len-deep state
+    batch = {"token": _sds((B, 1), i32)}
+    if cfg.family == "audio":
+        batch["enc_out"] = _sds((B, cfg.encoder_seq, cfg.d_model), bf16)
+    return batch

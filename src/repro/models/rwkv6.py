@@ -1,0 +1,198 @@
+"""RWKV6 "Finch" — attention-free token mixing with data-dependent decay
+(arXiv:2404.05892).
+
+Faithful core: per-channel data-dependent decay w_t produced by a LoRA on
+the token-shifted input (THE Finch contribution), matrix-valued recurrent
+state per head
+    S_t[i,j] = w_t[i]·S_{t-1}[i,j] + k_t[i]·v_t[j]
+    y_t[j]   = Σ_i r_t[i]·(S_{t-1}[i,j] + u[i]·k_t[i]·v_t[j])
+plus the squared-ReLU channel-mix FFN.  Simplification (DESIGN.md):
+receptance/key/value/gate token-shift mixes use static μ interpolation
+(the dynamic-mix LoRAs are folded into the decay LoRA only).
+
+Training/prefill run a lax.scan over time (the chunked-parallel form is a
+§Perf candidate); decode carries O(1) state — which is why this arch (and
+only the SSM/hybrid family) runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+LORA_R = 64
+
+
+class RWKVState(NamedTuple):
+    """Per-layer stacked decode state."""
+    S: jnp.ndarray        # (L, B, H, hd, hd) wkv state
+    x_tm: jnp.ndarray     # (L, B, D) previous token (time-mix shift)
+    x_cm: jnp.ndarray     # (L, B, D) previous token (channel-mix shift)
+    length: jnp.ndarray   # () int32
+
+
+def _layer_init(cfg: ModelConfig, key) -> dict:
+    dt = layers.dtype_of(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    dec_init = np.linspace(-6.0, -0.5, d).astype(np.float32)
+    return {
+        "ln1": jnp.zeros((d,), dt), "ln2": jnp.zeros((d,), dt),
+        # time-mix
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dt),
+        "wr": layers.dense_init(ks[1], d, d, dt),
+        "wk": layers.dense_init(ks[2], d, d, dt),
+        "wv": layers.dense_init(ks[3], d, d, dt),
+        "wg": layers.dense_init(ks[4], d, d, dt),
+        "wo": layers.dense_init(ks[5], d, d, dt),
+        "w0": jnp.asarray(dec_init, dt),                      # decay base
+        "wA": layers.dense_init(ks[6], d, LORA_R, dt),        # decay LoRA
+        "wB": layers.dense_init(ks[7], LORA_R, d, dt),
+        "u": (jax.random.normal(ks[8], (d,), jnp.float32) * 0.1).astype(dt),
+        "gn": jnp.ones((d,), dt),                             # group norm
+        # channel-mix
+        "mu_c": (jax.random.uniform(ks[9], (2, d), jnp.float32)).astype(dt),
+        "ck": layers.dense_init(ks[10], d, cfg.d_ff, dt),
+        "cv": layers.dense_init(ks[11], cfg.d_ff, d, dt),
+        "cr": layers.dense_init(jax.random.fold_in(key, 99), d, d, dt),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    dt = layers.dtype_of(cfg)
+    stacked = jax.vmap(lambda k: _layer_init(cfg, k))(
+        jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "embed": layers.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "head": layers.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt),
+        "layers": stacked,
+    }
+
+
+def _decay(p, xw: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent per-channel decay in (0,1): the Finch LoRA."""
+    lora = jnp.tanh(xw @ p["wA"]) @ p["wB"]
+    return jnp.exp(-jnp.exp((p["w0"] + lora).astype(jnp.float32)))
+
+
+def wkv_scan(r, k, v, w, u, S0):
+    """r/k/v/w: (B, T, H, hd) f32; u: (H, hd); S0: (B, H, hd, hd).
+    Returns y (B, T, H, hd) and final state."""
+    rt_ = jnp.moveaxis(r, 1, 0)
+    kt_ = jnp.moveaxis(k, 1, 0)
+    vt_ = jnp.moveaxis(v, 1, 0)
+    wt_ = jnp.moveaxis(w, 1, 0)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                                   # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]              # (B, H, hd, hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt,
+                       S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    S, ys = jax.lax.scan(step, S0, (rt_, kt_, vt_, wt_))
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+def _time_mix(cfg, p, x, x_prev):
+    """x: (B, T, D); x_prev: (B, D) last token of previous chunk."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    delta = xs - x
+    mix = lambda i: x + delta * p["mu"][i]
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    r = (xr @ p["wr"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decay(p, xw).reshape(B, T, H, hd)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+    return r, k, v, g, w, u, x[:, -1]
+
+
+def _group_norm(y, eps):
+    """Per-head normalization of the wkv output (RWKV6 ln_x)."""
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps)
+
+
+def _channel_mix(p, x, x_prev):
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    delta = xs - x
+    xk = x + delta * p["mu_c"][0]
+    xr = x + delta * p["mu_c"][1]
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return (kk @ p["cv"]) * jax.nn.sigmoid(xr @ p["cr"]), x[:, -1]
+
+
+def _block(cfg, p, x, state_S, x_tm, x_cm):
+    B, T, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    r, k, v, g, w, u, new_xtm = _time_mix(cfg, p, h, x_tm)
+    y, S = wkv_scan(r, k, v, w, u, state_S)
+    y = _group_norm(y, cfg.norm_eps).reshape(B, T, D).astype(x.dtype)
+    y = y * p["gn"]
+    x = x + ((y * g) @ p["wo"])
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    cm, new_xcm = _channel_mix(p, h2, x_cm)
+    return x + cm, S, new_xtm, new_xcm
+
+
+def forward(params, cfg: ModelConfig, tokens, state: RWKVState | None = None):
+    """Training / prefill.  Returns (logits, final RWKVState)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, T, D = x.shape
+    H, hd = cfg.n_heads, D // cfg.n_heads
+    if state is None:
+        state = RWKVState(
+            S=jnp.zeros((cfg.n_layers, B, H, hd, hd), jnp.float32),
+            x_tm=jnp.zeros((cfg.n_layers, B, D), x.dtype),
+            x_cm=jnp.zeros((cfg.n_layers, B, D), x.dtype),
+            length=jnp.zeros((), jnp.int32))
+
+    def body(x, xs):
+        p, S0, xtm, xcm = xs
+        x, S, ntm, ncm = _block(cfg, p, x, S0, xtm, xcm)
+        return x, (S, ntm, ncm)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (S, xtm, xcm) = jax.lax.scan(
+        body_fn, x, (params["layers"], state.S, state.x_tm, state.x_cm))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.lm_head_apply(params["embed"], params.get("head"), x,
+                                  cfg.logits_softcap)
+    return logits, RWKVState(S, xtm, xcm, state.length + T)
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    logits, _ = forward(params, cfg, batch["tokens"])
+    return layers.cross_entropy(logits, batch["labels"])
+
+
+def init_state(cfg: ModelConfig, batch: int, _max_len: int, dtype=jnp.bfloat16
+               ) -> RWKVState:
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    return RWKVState(
+        S=jnp.zeros((cfg.n_layers, batch, H, hd, hd), jnp.float32),
+        x_tm=jnp.zeros((cfg.n_layers, batch, D), dtype),
+        x_cm=jnp.zeros((cfg.n_layers, batch, D), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, cfg: ModelConfig, state: RWKVState, token):
+    logits, new_state = forward(params, cfg, token, state)
+    return logits[:, 0], new_state

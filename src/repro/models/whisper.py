@@ -1,0 +1,167 @@
+"""Whisper backbone (arXiv:2212.04356) — encoder-decoder transformer.
+
+Per the assignment, the conv/mel frontend is a STUB: `input_specs()`
+provides precomputed frame embeddings (B, frames, d_model); the encoder is
+the standard bidirectional stack with sinusoidal positions, the decoder a
+causal stack with cross-attention (learned positions).  serve_step decodes
+one token against (self-KV cache, precomputed cross-KV).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers
+from repro.models.attention import AttnSpec, KVCache
+
+MAX_DEC_POS = 1 << 20
+
+
+def _spec(cfg: ModelConfig, causal: bool) -> AttnSpec:
+    return AttnSpec(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.hd, rope_theta=None, causal=causal,
+                    norm_eps=cfg.norm_eps)
+
+
+def _enc_layer_init(cfg, key):
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.zeros((cfg.d_model,), dt),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "attn": attention.init(ks[0], cfg.d_model, _spec(cfg, False), dt),
+            "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu", dt)}
+
+
+def _dec_layer_init(cfg, key):
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {"ln1": jnp.zeros((cfg.d_model,), dt),
+            "ln_x": jnp.zeros((cfg.d_model,), dt),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "attn": attention.init(ks[0], cfg.d_model, _spec(cfg, True), dt),
+            "xattn": attention.init(ks[1], cfg.d_model, _spec(cfg, False), dt),
+            "mlp": layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu", dt)}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    enc = jax.vmap(lambda k: _enc_layer_init(cfg, k))(
+        jax.random.split(ks[0], cfg.encoder_layers))
+    dec = jax.vmap(lambda k: _dec_layer_init(cfg, k))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": layers.embed_init(ks[2], cfg.vocab_size, cfg.d_model, dt),
+        "pos_dec": layers.embed_init(ks[3], 4096, cfg.d_model, dt) * 0.01,
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm": jnp.zeros((cfg.d_model,), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, F, d) stub embeddings → encoder states."""
+    B, F, D = frames.shape
+    pos = jnp.asarray(layers.sinusoid_positions(F, D), frames.dtype)
+    x = frames + pos[None]
+
+    def body(x, p):
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = attention.apply(p["attn"], h, _spec(cfg, False))
+        x = x + a
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + layers.mlp_apply(p["mlp"], h, "gelu"), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return layers.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(p, enc_out, cfg):
+    B, F, _ = enc_out.shape
+    K, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p["wk"]).reshape(B, F, K, hd)
+    v = (enc_out @ p["wv"]).reshape(B, F, K, hd)
+    return k, v
+
+
+def decode(params, cfg: ModelConfig, tokens, enc_out,
+           cache: "WhisperCache | None" = None, max_len: int | None = None):
+    """Teacher-forced decoding (training) or cached single-token decode."""
+    B, T = tokens.shape
+    base = cache.length if cache is not None else 0
+    x = jnp.take(params["embed"], tokens, axis=0)
+    posv = jnp.take(params["pos_dec"],
+                    (jnp.arange(T) + base) % params["pos_dec"].shape[0],
+                    axis=0)
+    x = x + posv[None]
+
+    def body(carry, xs):
+        x = carry
+        if cache is not None:
+            p, ck, cv = xs
+            lc = KVCache(ck, cv, cache.length)
+        else:
+            p = xs
+            lc = None
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, nc = attention.apply(p["attn"], h, _spec(cfg, True), cache=lc)
+        x = x + a
+        h = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        xkv = _cross_kv(p["xattn"], enc_out, cfg)
+        a, _ = attention.apply(p["xattn"], h, _spec(cfg, False),
+                               cross_kv=xkv)
+        x = x + a
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_apply(p["mlp"], h, "gelu")
+        ys = (nc.k, nc.v) if cache is not None else (
+            None if max_len is None else nc)
+        return x, ys
+
+    if cache is not None:
+        body_fn = body
+        x, (nk, nv) = jax.lax.scan(
+            body_fn, x, (params["dec_layers"], cache.k, cache.v))
+        new_cache = WhisperCache(nk, nv, cache.length + T)
+    else:
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, kvs = jax.lax.scan(body_fn, x, params["dec_layers"])
+        new_cache = None
+        if max_len is not None:
+            k, v = kvs
+            pad = [(0, 0), (0, 0), (0, max_len - T), (0, 0), (0, 0)]
+            new_cache = WhisperCache(jnp.pad(k, pad).astype(jnp.bfloat16),
+                                     jnp.pad(v, pad).astype(jnp.bfloat16),
+                                     jnp.asarray(T, jnp.int32))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.lm_head_apply(params["embed"], None, x, None)
+    return logits, new_cache
+
+
+class WhisperCache(NamedTuple):
+    k: jnp.ndarray          # (L, B, S_max, K, hd) decoder self-attn
+    v: jnp.ndarray
+    length: jnp.ndarray
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> WhisperCache:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return WhisperCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                        jnp.zeros((), jnp.int32))
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    enc_out = encode(params, cfg, batch["frames"])
+    logits, _ = decode(params, cfg, batch["tokens"], enc_out)
+    return layers.cross_entropy(logits, batch["labels"])
+
+
+def decode_step(params, cfg: ModelConfig, cache: WhisperCache, token,
+                enc_out):
+    logits, new_cache = decode(params, cfg, token, enc_out, cache=cache)
+    return logits[:, 0], new_cache

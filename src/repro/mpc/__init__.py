@@ -1,0 +1,4 @@
+"""Secret-sharing MPC substrate over Z_2^64 (Protocol 1 + share algebra)."""
+from repro.mpc import beaver, sharing, truncation
+
+__all__ = ["sharing", "beaver", "truncation"]

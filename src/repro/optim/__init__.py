@@ -1,0 +1,7 @@
+"""Optimizers with shardable pytree states (state mirrors the param tree,
+so pjit shardings transfer 1:1)."""
+from repro.optim.optimizers import (adamw, clip_by_global_norm,
+                                    make_optimizer, momentum, sgd)
+
+__all__ = ["sgd", "momentum", "adamw", "make_optimizer",
+           "clip_by_global_norm"]

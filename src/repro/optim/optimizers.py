@@ -1,0 +1,101 @@
+"""SGD / momentum / AdamW — minimal, pjit-friendly.
+
+`Optimizer` is a pair of pure functions:
+  init(params)               -> opt_state (pytree mirroring params)
+  update(grads, state, params, lr) -> (new_params, new_state)
+
+State mirrors the param tree leaf-for-leaf so the launcher can reuse the
+parameter PartitionSpecs for the optimizer state (ZeRO-style sharding for
+free under FSDP specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def sgd() -> Optimizer:
+    return Optimizer(
+        name="sgd",
+        init=lambda params: (),
+        update=lambda grads, state, params, lr: (
+            jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                       - lr * g.astype(jnp.float32)
+                                       ).astype(p.dtype), params, grads),
+            state),
+    )
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p), params)
+
+    def update(grads, m, params, lr):
+        m = jax.tree.map(lambda mi, g: beta * mi.astype(jnp.float32)
+                         + g.astype(jnp.float32), m, grads)
+        new_p = jax.tree.map(lambda p, mi: (p.astype(jnp.float32)
+                                            - lr * mi).astype(p.dtype),
+                             params, m)
+        return new_p, jax.tree.map(lambda p, mi: mi.astype(p.dtype),
+                                   params, m)
+
+    return Optimizer("momentum", init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1)
+                         * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, mi, vi):
+            step = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        return (jax.tree.map(upd, params, m, v),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer("adamw", init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](**kw)

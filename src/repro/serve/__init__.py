@@ -1,0 +1,4 @@
+"""Serving runtime: continuous batching over slot-stacked KV caches."""
+from repro.serve.engine import Request, ServeEngine
+
+__all__ = ["ServeEngine", "Request"]

@@ -1,0 +1,121 @@
+"""Continuous batching: requests enter/leave the decode batch at any step.
+
+Implementation: per-slot KV caches are stacked on a leading slot axis and
+decoded with `jax.vmap` over slots (params broadcast) — each slot carries
+its own `length`, so sequences at different depths batch together, the
+property fixed-batch decode lacks.  Prefill runs per admitted request
+(B=1, prompt padded to a bucket to bound compile count) and its cache is
+written into a free slot.
+
+This wraps the same `api.prefill` / `api.decode_step` the dry-run lowers,
+so the engine works unchanged for any decoder-only architecture config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int, buckets=(16, 32, 64, 128, 256)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class ServeEngine:
+    def __init__(self, api, params, n_slots: int = 8, max_len: int = 512,
+                 eos_id: Optional[int] = None):
+        assert api.cfg.family in ("dense", "moe", "vlm", "ssm", "hybrid"), \
+            "engine supports decoder-style families"
+        self.api = api
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        slot_cache = api.init_decode_state(1, max_len)
+        self.caches = jax.tree.map(
+            lambda x: jnp.stack([x] * n_slots), slot_cache)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_tok = np.zeros((n_slots, 1, 1), np.int32)  # (slot, B=1, 1)
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._next_rid = 0
+        self._prefill = jax.jit(
+            lambda p, t: api.prefill(p, t, max_len=max_len),
+            static_argnums=())
+        self._decode_v = jax.jit(jax.vmap(
+            lambda p, c, t: api.decode_step(p, c, t),
+            in_axes=(None, 0, 0)))
+
+    # -- client API --------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        return rid
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    # -- scheduler ---------------------------------------------------------
+    def _admit(self) -> None:
+        for s in range(self.n_slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            b = _bucket(len(req.prompt))
+            padded = np.full((1, b), 0, np.int32)
+            padded[0, b - len(req.prompt):] = req.prompt   # left-pad
+            logits, cache = self._prefill(self.params, jnp.asarray(padded))
+            tok = int(jnp.argmax(logits[0]))
+            req.generated.append(tok)
+            self.slot_req[s] = req
+            self.slot_tok[s, 0, 0] = tok
+            self.caches = jax.tree.map(
+                lambda c, new: c.at[s].set(new), self.caches, cache)
+
+    def step(self) -> int:
+        """Admit + one batched decode step.  Returns #active slots."""
+        self._admit()
+        active = [s for s in range(self.n_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        logits, self.caches = self._decode_v(
+            self.params, self.caches, jnp.asarray(self.slot_tok))
+        toks = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+        for s in active:
+            req = self.slot_req[s]
+            tok = int(toks[s])
+            req.generated.append(tok)
+            self.slot_tok[s, 0, 0] = tok
+            if (len(req.generated) >= req.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)):
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[s] = None
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            if not self.busy:
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,155 @@
+"""bigint limb arithmetic vs python-int oracles (incl. hypothesis sweeps)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.crypto import bigint
+from repro.crypto.bigint import (Modulus, carry_sweep, big_lt, big_mul_full,
+                                 from_mont, int_to_limbs, limbs_to_int,
+                                 mod_add, mod_sub, mont_exp_bits,
+                                 mont_exp_const, mont_mul, mul_low, to_mont,
+                                 int_to_bits, limbs_to_bits, nlimbs)
+
+RNG = np.random.default_rng(0)
+
+# A few fixed odd moduli of assorted sizes (incl. a real 1024-bit-style one)
+MODULI = [
+    97,
+    (1 << 61) - 1,
+    0xF123_4567_89AB_CDEF_0123_4567_89AB_CD0F_FFFF_FFFF_FFFF_FFC5,
+    int("0x" + "d" * 128, 16) | 1,      # 512-bit odd
+]
+
+
+def rand_below(n, size):
+    return [int(RNG.integers(0, 1 << 62)) % n if n < (1 << 62)
+            else int.from_bytes(RNG.bytes((n.bit_length() + 7) // 8), "little") % n
+            for _ in range(size)]
+
+
+def test_roundtrip_int_limbs():
+    for x in [0, 1, 4095, 4096, (1 << 200) - 12345]:
+        L = nlimbs(max(1, x.bit_length()))
+        assert limbs_to_int(int_to_limbs(x, L)) == x
+
+
+def test_carry_sweep_exact():
+    raw = jnp.asarray(np.array([[4095, 4095, 4095, 0],
+                                [70000, 123456, 999999, 1]], np.uint32))
+    out = np.asarray(carry_sweep(raw))
+    for i in range(2):
+        want = sum(int(v) << (12 * j) for j, v in enumerate(np.asarray(raw)[i]))
+        got = limbs_to_int(out[i])
+        assert got == want % (1 << 48)
+        assert (out[i] <= 0xFFF).all()
+
+
+@pytest.mark.parametrize("n", MODULI)
+def test_mod_add_sub(n):
+    L = nlimbs(n.bit_length())
+    mod = Modulus.make(n)
+    a = rand_below(n, 8)
+    b = rand_below(n, 8)
+    A = jnp.asarray(bigint.ints_to_limbs(a, L))
+    B = jnp.asarray(bigint.ints_to_limbs(b, L))
+    s = [limbs_to_int(x) for x in np.asarray(mod_add(A, B, mod))]
+    d = [limbs_to_int(x) for x in np.asarray(mod_sub(A, B, mod))]
+    assert s == [(x + y) % n for x, y in zip(a, b)]
+    assert d == [(x - y) % n for x, y in zip(a, b)]
+
+
+@pytest.mark.parametrize("n", MODULI)
+def test_mont_mul_matches_python(n):
+    L = nlimbs(n.bit_length())
+    mod = Modulus.make(n)
+    R = 1 << (12 * L)
+    Rinv = pow(R, -1, n)
+    a = rand_below(n, 16)
+    b = rand_below(n, 16)
+    A = jnp.asarray(bigint.ints_to_limbs(a, L))
+    B = jnp.asarray(bigint.ints_to_limbs(b, L))
+    got = [limbs_to_int(x) for x in np.asarray(mont_mul(A, B, mod))]
+    want = [(x * y * Rinv) % n for x, y in zip(a, b)]
+    assert got == want
+
+
+@pytest.mark.parametrize("n", MODULI)
+def test_to_from_mont_roundtrip(n):
+    L = nlimbs(n.bit_length())
+    mod = Modulus.make(n)
+    a = rand_below(n, 8)
+    A = jnp.asarray(bigint.ints_to_limbs(a, L))
+    back = [limbs_to_int(x) for x in np.asarray(from_mont(to_mont(A, mod), mod))]
+    assert back == a
+
+
+@pytest.mark.parametrize("n", MODULI[:3])
+def test_mont_exp(n):
+    mod = Modulus.make(n)
+    base = rand_below(n, 4)
+    exps = [0, 1, 2, 65537]
+    B = to_mont(jnp.asarray(bigint.ints_to_limbs(base, mod.L)), mod)
+    for e in exps:
+        got = [limbs_to_int(x) for x in
+               np.asarray(from_mont(mont_exp_const(B, e, mod), mod))]
+        assert got == [pow(x, e, n) for x in base]
+
+
+def test_mont_exp_bits_traced():
+    n = MODULI[1]
+    mod = Modulus.make(n)
+    base = rand_below(n, 5)
+    exps = rand_below(1 << 48, 5)
+    B = to_mont(jnp.asarray(bigint.ints_to_limbs(base, mod.L)), mod)
+    bits = jnp.asarray(np.stack([int_to_bits(e, 48) for e in exps]))
+    got = [limbs_to_int(x) for x in
+           np.asarray(from_mont(mont_exp_bits(B, bits, mod), mod))]
+    assert got == [pow(x, e, n) for x, e in zip(base, exps)]
+
+
+def test_big_mul_full_and_low():
+    a = [(1 << 200) - 3, 12345, 1]
+    b = [(1 << 150) + 7, (1 << 100) - 1, 0]
+    La, Lb = nlimbs(201), nlimbs(151)
+    A = jnp.asarray(bigint.ints_to_limbs(a, La))
+    B = jnp.asarray(bigint.ints_to_limbs(b, Lb))
+    out = nlimbs(360)
+    got = [limbs_to_int(x) for x in np.asarray(big_mul_full(A, B, out))]
+    assert got == [(x * y) % (1 << (12 * out)) for x, y in zip(a, b)]
+    lowL = 10
+    gotl = [limbs_to_int(x) for x in np.asarray(mul_low(A, B[..., :lowL], lowL))]
+    assert gotl == [(x * y) % (1 << (12 * lowL)) for x, y in zip(a, b)]
+
+
+def test_big_lt():
+    L = 8
+    a = [5, 100, (1 << 90) - 1]
+    b = [6, 100, 1 << 89]
+    A = jnp.asarray(bigint.ints_to_limbs(a, L))
+    B = jnp.asarray(bigint.ints_to_limbs(b, L))
+    assert list(np.asarray(big_lt(A, B))) == [x < y for x, y in zip(a, b)]
+
+
+def test_limbs_to_bits():
+    x = 0b1011_0000_1111_0101
+    arr = jnp.asarray(int_to_limbs(x, 4))
+    bits = np.asarray(limbs_to_bits(arr, 16))
+    want = int_to_bits(x, 16)
+    assert (bits == want).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=3, max_value=(1 << 256) - 1),
+       st.integers(min_value=0), st.integers(min_value=0))
+def test_hypothesis_montmul(n, a, b):
+    n |= 1
+    a %= n
+    b %= n
+    mod = Modulus.make(n)
+    R = 1 << (12 * mod.L)
+    A = jnp.asarray(int_to_limbs(a, mod.L))
+    B = jnp.asarray(int_to_limbs(b, mod.L))
+    got = limbs_to_int(np.asarray(mont_mul(A, B, mod)))
+    assert got == (a * b * pow(R, -1, n)) % n

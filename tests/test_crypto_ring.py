@@ -1,0 +1,66 @@
+"""Z_2^64 (hi,lo)-pair arithmetic vs numpy uint64 oracles."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.crypto import fixed_point, ring
+
+RNG = np.random.default_rng(5)
+U64 = st.integers(min_value=0, max_value=(1 << 64) - 1)
+
+
+def rand_u64(shape):
+    return RNG.integers(0, 1 << 64, size=shape, dtype=np.uint64)
+
+
+def test_roundtrip():
+    x = rand_u64((4, 3))
+    assert (ring.to_numpy_u64(ring.from_numpy_u64(x)) == x).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(U64, U64)
+def test_add_sub_mul_hypothesis(a, b):
+    A = ring.from_numpy_u64(np.array([a], np.uint64))
+    B = ring.from_numpy_u64(np.array([b], np.uint64))
+    m = (1 << 64) - 1
+    assert int(ring.to_numpy_u64(ring.add(A, B))[0]) == (a + b) & m
+    assert int(ring.to_numpy_u64(ring.sub(A, B))[0]) == (a - b) & m
+    assert int(ring.to_numpy_u64(ring.mul(A, B))[0]) == (a * b) & m
+    assert int(ring.to_numpy_u64(ring.neg(A))[0]) == (-a) & m
+
+
+def test_mul_pub_and_shifts():
+    x = rand_u64((16,))
+    X = ring.from_numpy_u64(x)
+    for k in [0, 1, 3, -5, 1 << 40]:
+        got = ring.to_numpy_u64(ring.mul_pub_int(X, k))
+        want = x * np.uint64(k % (1 << 64))
+        assert (got == want).all()
+    for s in [0, 1, 12, 31, 32, 33, 63]:
+        assert (ring.to_numpy_u64(ring.shift_left(X, s)) == (x << np.uint64(s))).all()
+        assert (ring.to_numpy_u64(ring.shift_right_logical(X, s))
+                == (x >> np.uint64(s))).all()
+
+
+def test_fixed_point_roundtrip():
+    x = RNG.normal(size=(32,)) * 100
+    enc = fixed_point.encode(x, 20)
+    dec = fixed_point.decode(enc, 20)
+    np.testing.assert_allclose(dec, x, atol=2 ** -20)
+
+
+def test_sum_axis():
+    x = rand_u64((7, 5))
+    got = ring.to_numpy_u64(ring.sum_axis(ring.from_numpy_u64(x), 0))
+    want = x.sum(axis=0)  # numpy uint64 wraps mod 2^64
+    assert (got == want).all()
+
+
+def test_matmul_public_by_ring():
+    xs = RNG.integers(-1000, 1000, size=(4, 6)).astype(np.int32)
+    a = rand_u64((6, 3))
+    got = ring.to_numpy_u64(ring.matmul(jnp.asarray(xs), ring.from_numpy_u64(a)))
+    want = (xs.astype(np.int64).astype(np.uint64)[:, :, None] * a[None]).sum(1)
+    assert (got == want).all()

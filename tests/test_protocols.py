@@ -1,0 +1,221 @@
+"""EFMVFL protocol correctness: Protocol 2/3/4 vs plaintext oracles, and
+mock-HE ≡ real-Paillier equivalence."""
+import jax
+import numpy as np
+
+from repro.core import glm as glm_lib
+from repro.core import protocols
+from repro.core.comm import CommMeter
+from repro.crypto import fixed_point, paillier, ring
+from repro.mpc import beaver, sharing
+
+RNG = np.random.default_rng(23)
+F = 18
+FX = 12
+W = 18   # exponent width for tests (small features)
+
+
+def _shares(x, key, f=F):
+    return sharing.share(fixed_point.encode(x, f), jax.random.key(key))
+
+
+def test_gradient_operator_lr():
+    n = 256
+    z = RNG.normal(size=n) * 2
+    y = np.where(RNG.uniform(size=n) > 0.5, 1.0, -1.0)
+    ctx = glm_lib.ShareCtx(z=_shares(z, 1), y=_shares(y, 2), ez=None, f=F,
+                           dealer=beaver.DealerTripleSource(3))
+    d0, d1 = glm_lib.LOGISTIC.gradient_operator(ctx)
+    got = fixed_point.decode(sharing.reconstruct(d0, d1), F)
+    np.testing.assert_allclose(got, 0.25 * z - 0.5 * y, atol=2 ** -F * 8)
+
+
+def test_gradient_operator_pr():
+    n = 128
+    z = RNG.normal(size=n)
+    ez = np.exp(z)
+    y = RNG.poisson(0.5, size=n).astype(np.float64)
+    ctx = glm_lib.ShareCtx(z=_shares(z, 4), y=_shares(y, 5),
+                           ez=_shares(ez, 6), f=F,
+                           dealer=beaver.DealerTripleSource(7))
+    d0, d1 = glm_lib.POISSON.gradient_operator(ctx)
+    got = fixed_point.decode(sharing.reconstruct(d0, d1), F)
+    np.testing.assert_allclose(got, ez - y, atol=2 ** -F * 8)
+
+
+def test_loss_lr_matches_float_oracle():
+    n = 512
+    z = RNG.normal(size=n)
+    y = np.where(RNG.uniform(size=n) > 0.6, 1.0, -1.0)
+    ctx = glm_lib.ShareCtx(z=_shares(z, 8), y=_shares(y, 9), ez=None, f=F,
+                           dealer=beaver.DealerTripleSource(10))
+    l0, l1 = glm_lib.LOGISTIC.loss_shares(ctx)
+    revealed = float(fixed_point.decode(sharing.reconstruct(l0, l1), F))
+    got = glm_lib.LOGISTIC.finalize_loss(revealed, y, n)
+    want = glm_lib.LOGISTIC.loss_float(z, y)
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+def test_loss_pr_matches_float_oracle():
+    n = 256
+    z = RNG.normal(size=n) * 0.5
+    ez = np.exp(z)
+    y = RNG.poisson(0.4, size=n).astype(np.float64)
+    ctx = glm_lib.ShareCtx(z=_shares(z, 11), y=_shares(y, 12),
+                           ez=_shares(ez, 13), f=F,
+                           dealer=beaver.DealerTripleSource(14))
+    l0, l1 = glm_lib.POISSON.loss_shares(ctx)
+    revealed = float(fixed_point.decode(sharing.reconstruct(l0, l1), F))
+    got = glm_lib.POISSON.finalize_loss(revealed, y, n)
+    want = glm_lib.POISSON.loss_float(z, y)
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+def _p3_setup(n, m, seed):
+    X = RNG.normal(size=(n, m))
+    d = RNG.normal(size=n) * 0.5
+    feats = protocols.EncodedFeatures.make(X, FX, W)
+    d_enc = fixed_point.encode(d, F)
+    d0, d1 = sharing.share(d_enc, jax.random.key(seed))
+    return X, d, feats, d0, d1
+
+
+def test_he_matvec_integer_exactness():
+    key = paillier.keygen(256, seed=31)
+    pub = key.pub
+    n, m = 12, 3
+    u = RNG.integers(0, 1 << 64, size=n, dtype=np.uint64)
+    exps = RNG.integers(0, 1 << W, size=(n, m), dtype=np.uint32)
+    cts = paillier.encrypt(
+        pub, fixed_point.r64_to_limbs(ring.from_numpy_u64(u), pub.Ln),
+        rng=np.random.default_rng(1))
+    want = [int(sum(int(exps[i, j]) * int(u[i]) for i in range(n)))
+            for j in range(m)]
+    for window in (1, 2, 4):   # bit-serial == fixed-window (§Perf variant)
+        out = protocols.he_matvec(pub, cts, exps, W, window=window)
+        dec = paillier.decode_ints(np.asarray(paillier.decrypt(key, out)))
+        assert dec == want, f"window={window}" 
+
+
+def test_protocol3_cp_matches_oracle_mock():
+    n, m = 200, 6
+    X, d, feats, d0, d1 = _p3_setup(n, m, 15)
+    backend = protocols.MockHEBackend(1024)
+    meter = CommMeter()
+    ct1 = backend.encrypt_share("B1", d1)
+    g = protocols.secure_gradient_cp(
+        backend, meter, p0="C", p1="B1", feats=feats,
+        d_self=d0, d_other_ct=ct1, d_other_share=d1,
+        mask_bound_bits=64 + W + 9, rng=np.random.default_rng(5))
+    got = fixed_point.decode(g, FX + F)
+    np.testing.assert_allclose(got, X.T @ d, rtol=0, atol=2 ** -FX * n * 2)
+
+
+def test_protocol3_mock_equals_paillier_bitwise():
+    """The mock backend must produce the *identical* ring result as real
+    Paillier (given identical masks) — validates the DESIGN §7 semantics."""
+    n, m = 24, 4
+    X, d, feats, d0, d1 = _p3_setup(n, m, 16)
+    key = paillier.keygen(256, seed=33)
+    pbackend = protocols.PaillierBackend({"C": key, "B1": key},
+                                         np.random.default_rng(9))
+    mbackend = protocols.MockHEBackend(256)
+    outs = {}
+    for name, backend in [("paillier", pbackend), ("mock", mbackend)]:
+        meter = CommMeter()
+        ct1 = backend.encrypt_share("B1", d1)
+        g = protocols.secure_gradient_cp(
+            backend, meter, p0="C", p1="B1", feats=feats,
+            d_self=d0, d_other_ct=ct1, d_other_share=d1,
+            mask_bound_bits=64 + W + 6, rng=np.random.default_rng(77))
+        outs[name] = ring.to_numpy_u64(g)
+    assert (outs["paillier"] == outs["mock"]).all()
+
+
+def test_protocol3_noncp():
+    n, m = 64, 5
+    X, d, feats, d0, d1 = _p3_setup(n, m, 17)
+    backend = protocols.MockHEBackend(1024)
+    meter = CommMeter()
+    cts = {"C": backend.encrypt_share("C", d0),
+           "B1": backend.encrypt_share("B1", d1)}
+    g = protocols.secure_gradient_noncp(
+        backend, meter, party="B2", cps=("C", "B1"), feats=feats,
+        d_cts=cts, d_shares={"C": d0, "B1": d1},
+        mask_bound_bits=64 + W + 7, rng=np.random.default_rng(6))
+    got = fixed_point.decode(g, FX + F)
+    np.testing.assert_allclose(got, X.T @ d, rtol=0, atol=2 ** -FX * n * 2)
+
+
+def test_comm_meter_accounting():
+    meter = CommMeter()
+    meter.ring("C", "B1", "P1.z_share", 100)
+    meter.cipher("B1", "C", "P3.enc_d", 10, 1024)
+    assert meter.total_bytes == 100 * 8 + 10 * 256
+    assert meter.summary()["TOTAL_MB"] == meter.total_mb
+
+
+# ---------------------------------------------------------------------------
+# Property-based protocol invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(min_value=-30, max_value=30), min_size=4,
+                max_size=16),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_p3_gradient_exact(xs, seed):
+    """Protocol 3 (mock backend ≡ Paillier, proven elsewhere) recovers
+    X^T d within fixed-point tolerance for arbitrary bounded inputs."""
+    n = len(xs)
+    rng = np.random.default_rng(seed)
+    X = np.asarray(xs, np.float64).reshape(n, 1) / 8.0
+    d = rng.normal(size=n)
+    feats = protocols.EncodedFeatures.make(X, FX, W)
+    d0, d1 = sharing.share(fixed_point.encode(d, F),
+                           jax.random.key(seed % 1000))
+    backend = protocols.MockHEBackend(1024)
+    g = protocols.secure_gradient_cp(
+        backend, CommMeter(), p0="C", p1="B1", feats=feats,
+        d_self=d0, d_other_ct=backend.encrypt_share("B1", d1),
+        d_other_share=d1, mask_bound_bits=64 + W + 6,
+        rng=np.random.default_rng(seed))
+    got = fixed_point.decode(g, FX + F)
+    np.testing.assert_allclose(got, X.T @ d, atol=2 ** -FX * n * 2 + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_share_reveal_only_masked(seed):
+    """What P1 sees in Protocol 3 (the masked value) is statistically
+    independent of the gradient: two different gradients under the SAME
+    mask stream differ by exactly their true difference — i.e. the mask
+    cancels; and under fresh masks the messages are unpredictable."""
+    n, m = 16, 2
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m))
+    feats = protocols.EncodedFeatures.make(X, FX, W)
+    backend = protocols.MockHEBackend(1024)
+
+    def masked_message(d, mask_seed):
+        d0, d1 = sharing.share(fixed_point.encode(d, F), jax.random.key(7))
+        enc_g = backend.matvec("B1", backend.encrypt_share("B1", d1),
+                               jax.numpy.asarray(feats.exps), feats.width)
+        R = protocols.mask_ints(64 + W + 6, m,
+                                np.random.default_rng(mask_seed))
+        return ring.to_numpy_u64(backend.add_mask("B1", enc_g, R))
+
+    d_a = rng.normal(size=n)
+    d_b = rng.normal(size=n)
+    msg_a = masked_message(d_a, 1234)
+    msg_b = masked_message(d_b, 1234)     # same masks
+    diff = (msg_a - msg_b).astype(np.int64)
+    # mask cancels: difference equals the unmasked value difference
+    da0, da1 = sharing.share(fixed_point.encode(d_a, F), jax.random.key(7))
+    db0, db1 = sharing.share(fixed_point.encode(d_b, F), jax.random.key(7))
+    va = backend.matvec("B1", da1, jax.numpy.asarray(feats.exps), feats.width)
+    vb = backend.matvec("B1", db1, jax.numpy.asarray(feats.exps), feats.width)
+    want = (ring.to_numpy_u64(va) - ring.to_numpy_u64(vb)).astype(np.int64)
+    assert (diff == want).all()

@@ -1,0 +1,54 @@
+"""Continuous-batching serve engine: slot reuse, per-slot depths, and
+equivalence of the vmapped decode with the plain decode path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import registry as models
+from repro.serve import ServeEngine
+
+
+def _setup(n_slots=3, max_len=64):
+    cfg = registry.get_smoke_config("qwen3-4b")
+    api = models.build(cfg)
+    params = api.init_params(jax.random.key(0))
+    return cfg, api, params, ServeEngine(api, params, n_slots=n_slots,
+                                         max_len=max_len)
+
+
+def test_continuous_batching_completes_all():
+    cfg, api, params, eng = _setup()
+    rng = np.random.default_rng(0)
+    want = {}
+    for i in range(8):                       # 8 requests > 3 slots
+        n_new = int(rng.integers(3, 9))      # ragged lengths
+        rid = eng.submit(rng.integers(0, cfg.vocab_size, size=12), n_new)
+        want[rid] = n_new
+    done = eng.run()
+    assert len(done) == 8
+    for req in done:
+        assert len(req.generated) == want[req.rid]
+        assert all(0 <= t < cfg.vocab_size for t in req.generated)
+
+
+def test_engine_matches_plain_decode():
+    """A single request through the engine produces the same tokens as a
+    manual prefill + greedy decode loop."""
+    cfg, api, params, eng = _setup(n_slots=2, max_len=64)
+    prompt = np.arange(16, dtype=np.int32) % cfg.vocab_size
+    rid = eng.submit(prompt, max_new_tokens=6)
+    done = eng.run()
+    got = done[0].generated
+
+    logits, cache = api.prefill(params, jnp.asarray(prompt)[None],
+                                max_len=64)
+    tok = int(jnp.argmax(logits[0]))
+    manual = [tok]
+    t = jnp.asarray([[tok]], jnp.int32)
+    for _ in range(5):
+        logits, cache = api.decode_step(params, cache, t)
+        tok = int(jnp.argmax(logits[0]))
+        manual.append(tok)
+        t = jnp.asarray([[tok]], jnp.int32)
+    assert got == manual, (got, manual)
