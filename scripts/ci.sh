@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI: fast test selection with explicit PYTHONPATH so collection
+# regressions (e.g. a hard dependency creeping into a test module) fail
+# loudly rather than silently skipping modules.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Collection must be clean before anything runs (4 modules failed to
+# import at seed; this guards the fix).
+python -m pytest -q --collect-only >/dev/null
+
+exec python -m pytest -x -q "$@"

@@ -31,7 +31,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.comm import CommMeter
 from repro.crypto import bigint, fixed_point, paillier, prng, ring
 from repro.crypto.bigint import mont_mul, mont_one
 from repro.crypto.ring import R64
@@ -240,6 +239,10 @@ class EncodedFeatures:
             exps=(xi + off).astype(np.uint32),
             fx=fx, width=width)
 
+    def slice(self, idx) -> "EncodedFeatures":
+        return EncodedFeatures(x_int=self.x_int[idx], exps=self.exps[idx],
+                               fx=self.fx, width=self.width)
+
 
 def mask_ints(bound_bits: int, m: int, rng: np.random.Generator) -> list[int]:
     """Statistical masks R_j uniform in [0, 2^(bound_bits + STAT_SEC))."""
@@ -252,8 +255,48 @@ def offset_correction(d_share: R64, width: int) -> R64:
     return ring.mul_pub_int(s, 1 << (width - 1))
 
 
+def mask_to_r64(R: list[int]) -> R64:
+    """The mask owner's local mod-2^64 image of R (for unmasking)."""
+    return ring.from_numpy_u64(np.array([r % (1 << 64) for r in R],
+                                        np.uint64))
+
+
+# --- per-party steps (pure: no metering — byte accounting happens at the
+# transport boundary via runtime.messages.Message.wire_bytes()) ------------
+
+def local_grad_share(feats: EncodedFeatures, d_self: R64) -> R64:
+    """Protocol 3 line 2 — a CP's local term X_p^T ⟨d⟩_p."""
+    return _from_col(ring.matmul(jnp.asarray(feats.x_int.T),
+                                 _as_col(d_self)))
+
+
+def masked_matvec(backend, key_owner: str, d_ct, feats: EncodedFeatures,
+                  mask_bound_bits: int, rng: np.random.Generator):
+    """Protocol 3 lines 4–6 at the feature owner: plaintext-matrix ×
+    ciphertext-vector under `key_owner`'s key, statistically masked and
+    re-randomized.  Returns (enc_masked, R_mod264) — the caller ships
+    enc_masked as a `P3.masked_grad` message and keeps R for unmasking."""
+    m = feats.exps.shape[1]
+    enc_g = backend.matvec(key_owner, d_ct, jnp.asarray(feats.exps),
+                           feats.width)
+    R = mask_ints(mask_bound_bits, m, rng)
+    return backend.add_mask(key_owner, enc_g, R), mask_to_r64(R)
+
+
+def decrypt_offset_corrected(backend, key_owner: str, enc_masked,
+                             d_own: R64, width: int) -> R64:
+    """Protocol 3 line 7 at the key owner: decrypt, reduce mod 2^64,
+    remove the OFF·Σ⟨d⟩ exponent-lift term (local: it knows its d-share).
+    The result goes back as a `P3.unmasked_share` message."""
+    w = backend.decrypt_to_r64(key_owner, enc_masked)
+    return ring.sub(w, offset_correction(d_own, width))
+
+
+# --- whole-protocol compositions (simulation evaluates both parties'
+# local steps in one call; tests and oracles use these) --------------------
+
 def secure_gradient_cp(
-    backend, meter: CommMeter, *,
+    backend, *,
     p0: str, p1: str,
     feats: EncodedFeatures,
     d_self: R64,                  # ⟨d⟩_{p0}, held by p0
@@ -263,29 +306,17 @@ def secure_gradient_cp(
     rng: np.random.Generator,
 ) -> R64:
     """Protocol 3 with P0 = a computing party.  Returns g_{p0} as ring
-    fixed-point with (fx + f) fractional bits (simulation evaluates both
-    parties' local steps)."""
-    n, m = feats.exps.shape
-    # line 2: local share of the gradient
-    g_self = ring.matmul(jnp.asarray(feats.x_int.T), _as_col(d_self))
-    g_self = _from_col(g_self)
-    # line 4: plaintext-matrix × ciphertext-vector (the paper's hot spot)
-    enc_g = backend.matvec(p1, d_other_ct, jnp.asarray(feats.exps), feats.width)
-    # lines 5-6: mask + (re-randomized) send to p1
-    R = mask_ints(mask_bound_bits, m, rng)
-    enc_masked = backend.add_mask(p1, enc_g, R)
-    meter.cipher(p0, p1, "P3.masked_grad", m, backend.key_bits(p1))
-    # line 7 (at p1): decrypt, reduce mod 2^64, remove the offset term
-    w = backend.decrypt_to_r64(p1, enc_masked)
-    w = ring.sub(w, offset_correction(d_other_share, feats.width))
-    meter.ring(p1, p0, "P3.unmasked_share", m)
-    # line 8 (at p0): combine and unmask
-    Rr = ring.from_numpy_u64(np.array([r % (1 << 64) for r in R], np.uint64))
+    fixed-point with (fx + f) fractional bits."""
+    g_self = local_grad_share(feats, d_self)
+    enc_masked, Rr = masked_matvec(backend, p1, d_other_ct, feats,
+                                   mask_bound_bits, rng)
+    w = decrypt_offset_corrected(backend, p1, enc_masked, d_other_share,
+                                 feats.width)
     return ring.sub(ring.add(g_self, w), Rr)
 
 
 def secure_gradient_noncp(
-    backend, meter: CommMeter, *,
+    backend, *,
     party: str, cps: tuple[str, str],
     feats: EncodedFeatures,
     d_cts: dict,                  # {cp: [[⟨d⟩_cp]]_cp} received broadcasts
@@ -295,19 +326,13 @@ def secure_gradient_noncp(
 ) -> R64:
     """Algorithm 1 lines 17–21: a non-computing party computes its gradient
     under BOTH CPs' keys.  g_p = Σ_cp (dec_cp − R_cp-correction)."""
-    n, m = feats.exps.shape
+    m = feats.exps.shape[1]
     total = ring.zeros((m,))
     for cp in cps:
-        enc_g = backend.matvec(cp, d_cts[cp], jnp.asarray(feats.exps),
-                               feats.width)
-        R = mask_ints(mask_bound_bits, m, rng)
-        enc_masked = backend.add_mask(cp, enc_g, R)
-        meter.cipher(party, cp, "P3.masked_grad", m, backend.key_bits(cp))
-        w = backend.decrypt_to_r64(cp, enc_masked)
-        w = ring.sub(w, offset_correction(d_shares[cp], feats.width))
-        meter.ring(cp, party, "P3.unmasked_share", m)
-        Rr = ring.from_numpy_u64(np.array([r % (1 << 64) for r in R],
-                                          np.uint64))
+        enc_masked, Rr = masked_matvec(backend, cp, d_cts[cp], feats,
+                                       mask_bound_bits, rng)
+        w = decrypt_offset_corrected(backend, cp, enc_masked, d_shares[cp],
+                                     feats.width)
         total = ring.add(total, ring.sub(w, Rr))
     return total
 

@@ -1,9 +1,15 @@
-"""Algorithm 1 — the EFMVFL training loop (multi-party, simulation mode).
+"""Algorithm 1 — the EFMVFL training loop, as a thin wrapper over the
+party runtime (`repro.runtime`).
 
-One process plays all parties; every cross-party value passes through the
-CommMeter with real wire sizes, so communication results are exact.  The
-same protocol code is re-targeted onto the production mesh by
-launch/secure_dryrun.py (pod axis = party).
+The protocol itself lives in actor form: `runtime.party` actors own all
+party-local state (features, weights, key pairs), `runtime.messages`
+types carry every cross-party value, a `runtime.transport.Transport`
+meters each message's `wire_bytes()` and counts communication rounds,
+and `runtime.scheduler.VFLScheduler` conducts the phases.  The default
+`LocalTransport` replays the original single-process simulation
+bit-for-bit (losses, weights, per-tag comm bytes — asserted by
+tests/test_runtime_parity.py); pass `PipelinedTransport` to overlap the
+data-independent Protocol-3 legs.
 
 Roles: party "C" holds the label; "B1".."Bk" are data providers.  Two
 computing parties (CPs) hold all shares (paper §4.3); CP selection is
@@ -13,18 +19,14 @@ fixed (C, B1) by default, or uniformly random per iteration
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Sequence
 
-import jax
 import numpy as np
 
 from repro.core import glm as glm_lib
 from repro.core import protocols
 from repro.core.comm import CommMeter
-from repro.crypto import fixed_point, paillier, ring
-from repro.crypto.ring import R64
-from repro.mpc import beaver, sharing
+from repro.crypto import paillier
 
 
 @dataclasses.dataclass
@@ -57,40 +59,10 @@ class TrainResult:
     meter: CommMeter
     runtime_s: float
     n_iter: int
+    rounds: int = 0                   # communication rounds (transport count)
 
     def predict_wx(self, parties: Sequence[PartyData]) -> np.ndarray:
         return sum(p.X @ self.weights[p.name] for p in parties)
-
-
-class _MeteredDealer:
-    """Counts the online Beaver openings (2 values × 2 directions × 8B)."""
-
-    def __init__(self, dealer, meter: CommMeter, a: str, b: str):
-        self._dealer = dealer
-        self._meter = meter
-        self._a, self._b = a, b
-
-    def elementwise(self, shape):
-        n = int(np.prod(shape))
-        self._meter.ring(self._a, self._b, "beaver_open", 2 * n)
-        self._meter.ring(self._b, self._a, "beaver_open", 2 * n)
-        return self._dealer.elementwise(shape)
-
-
-def _share_to_cps(val: R64, owner: str, cps: tuple[str, str],
-                  meter: CommMeter, key: jax.Array,
-                  tag: str) -> tuple[R64, R64]:
-    """Protocol 1 with CP routing (Algorithm 1 lines 7/15-16)."""
-    s0, s1 = sharing.share(val, key)
-    n = int(np.prod(val.lo.shape))
-    if owner == cps[0]:
-        meter.ring(owner, cps[1], tag, n)
-    elif owner == cps[1]:
-        meter.ring(owner, cps[0], tag, n)
-    else:
-        meter.ring(owner, cps[0], tag, n)
-        meter.ring(owner, cps[1], tag, n)
-    return s0, s1
 
 
 def make_backend(cfg: VFLConfig, party_names: Sequence[str],
@@ -103,142 +75,12 @@ def make_backend(cfg: VFLConfig, party_names: Sequence[str],
 
 
 def train_vfl(parties: list[PartyData], y: np.ndarray, cfg: VFLConfig,
-              backend=None) -> TrainResult:
+              backend=None, transport=None) -> TrainResult:
     """parties[0] must be C (the label holder)."""
-    assert parties[0].name == "C"
-    model = glm_lib.GLMS[cfg.glm]
-    names = [p.name for p in parties]
-    rng = np.random.default_rng(cfg.seed + 90001)   # protocol randomness
-    batch_rng = np.random.default_rng(cfg.seed)     # batch schedule (matches
-    jkey = jax.random.key(cfg.seed)                 # train_centralized)
-    meter = CommMeter()
-    if backend is None:
-        backend = make_backend(cfg, names, rng)
-    dealer = beaver.DealerTripleSource(seed=cfg.seed + 1)
-
-    n_total = parties[0].X.shape[0]
-    W = {p.name: np.zeros(p.X.shape[1]) for p in parties}
-    feats = {p.name: protocols.EncodedFeatures.make(p.X, cfg.fx, cfg.exp_width)
-             for p in parties}
-    # v ≤ n·2^width·2^64 → mask bound for statistical hiding
-    mask_bound = 64 + cfg.exp_width + int(np.ceil(np.log2(cfg.batch_size))) + 1
-    if cfg.he_backend == "paillier":
-        need = mask_bound + protocols.STAT_SEC + 2
-        if cfg.key_bits < need:
-            raise ValueError(f"key_bits={cfg.key_bits} too small; need >= {need}")
-
-    losses: list[float] = []
-    flag = False
-    t0 = time.perf_counter()
-    order = batch_rng.permutation(n_total)
-    cursor = 0
-    it = 0
-    while it < cfg.max_iter and not flag:
-        # -- iteration setup -------------------------------------------------
-        if cursor + cfg.batch_size > n_total:
-            order = batch_rng.permutation(n_total)
-            cursor = 0
-        idx = order[cursor:cursor + cfg.batch_size]
-        cursor += cfg.batch_size
-        nb = len(idx)
-        if cfg.cp_selection == "random":
-            cp_idx = rng.choice(len(names), size=2, replace=False)
-            cps = (names[cp_idx[0]], names[cp_idx[1]])
-        else:
-            cps = (names[0], names[1])
-        jkey, *subkeys = jax.random.split(jkey, len(names) * 2 + 3)
-
-        # -- Protocol 1: share intermediate results -------------------------
-        z_shares = [None, None]
-        ez_shares = None
-        for i, p in enumerate(parties):
-            zp = p.X[idx] @ W[p.name]
-            s0, s1 = _share_to_cps(fixed_point.encode(zp, cfg.f), p.name,
-                                   cps, meter, subkeys[i], "P1.z_share")
-            z_shares[0] = s0 if z_shares[0] is None else ring.add(z_shares[0], s0)
-            z_shares[1] = s1 if z_shares[1] is None else ring.add(z_shares[1], s1)
-        y_shares = _share_to_cps(fixed_point.encode(y[idx], cfg.f), "C",
-                                 cps, meter, subkeys[len(names)], "P1.y_share")
-        mdealer = _MeteredDealer(dealer, meter, cps[0], cps[1])
-        if model.needs_exp:
-            for i, p in enumerate(parties):
-                ezp = np.exp(np.clip(model.exp_sign * (p.X[idx] @ W[p.name]),
-                                     -30, 8))
-                es = _share_to_cps(fixed_point.encode(ezp, cfg.f), p.name,
-                                   cps, meter,
-                                   subkeys[len(names) + 1 + i], "P1.ez_share")
-                if ez_shares is None:
-                    ez_shares = es
-                else:   # e^{Σz_p} = Π e^{z_p}: Beaver product + truncation
-                    prod = beaver.mul(ez_shares, es, *mdealer.elementwise((nb,)))
-                    from repro.mpc import truncation
-                    ez_shares = truncation.trunc_pair(prod[0], prod[1], cfg.f)
-
-        ctx = glm_lib.ShareCtx(z=tuple(z_shares), y=y_shares, ez=ez_shares,
-                               f=cfg.f, dealer=mdealer)
-
-        # -- Protocol 2: gradient-operator on shares ------------------------
-        d0, d1 = model.gradient_operator(ctx)
-
-        # -- Protocol 3: secure gradients ------------------------------------
-        # CPs encrypt their d-share under their own key, exchange/broadcast.
-        ct0 = backend.encrypt_share(cps[0], d0)
-        ct1 = backend.encrypt_share(cps[1], d1)
-        meter.cipher(cps[1], cps[0], "P3.enc_d", nb, backend.key_bits(cps[1]))
-        meter.cipher(cps[0], cps[1], "P3.enc_d", nb, backend.key_bits(cps[0]))
-        grads: dict[str, R64] = {}
-        grads[cps[0]] = protocols.secure_gradient_cp(
-            backend, meter, p0=cps[0], p1=cps[1],
-            feats=_slice_feats(feats[cps[0]], idx),
-            d_self=d0, d_other_ct=ct1, d_other_share=d1,
-            mask_bound_bits=mask_bound, rng=rng)
-        grads[cps[1]] = protocols.secure_gradient_cp(
-            backend, meter, p0=cps[1], p1=cps[0],
-            feats=_slice_feats(feats[cps[1]], idx),
-            d_self=d1, d_other_ct=ct0, d_other_share=d0,
-            mask_bound_bits=mask_bound, rng=rng)
-        for p in parties:
-            if p.name in cps:
-                continue
-            meter.cipher(cps[0], p.name, "P3.enc_d_bcast", nb,
-                         backend.key_bits(cps[0]))
-            meter.cipher(cps[1], p.name, "P3.enc_d_bcast", nb,
-                         backend.key_bits(cps[1]))
-            grads[p.name] = protocols.secure_gradient_noncp(
-                backend, meter, party=p.name, cps=cps,
-                feats=_slice_feats(feats[p.name], idx),
-                d_cts={cps[0]: ct0, cps[1]: ct1},
-                d_shares={cps[0]: d0, cps[1]: d1},
-                mask_bound_bits=mask_bound, rng=rng)
-
-        # -- local weight update (eq. 6; 1/m applied at reveal) --------------
-        for p in parties:
-            g = fixed_point.decode(grads[p.name], cfg.fx + cfg.f) / nb
-            W[p.name] = W[p.name] - cfg.lr * g
-
-        # -- Protocol 4: secure loss -----------------------------------------
-        l0, l1 = model.loss_shares(ctx)
-        meter.ring(cps[1], cps[0], "P4.loss_share", 1)
-        if cps[0] != "C":           # loss must reach C (Protocol 4 line 3)
-            meter.ring(cps[0], "C", "P4.loss_share", 1)
-        revealed = float(fixed_point.decode(sharing.reconstruct(l0, l1), cfg.f))
-        loss = model.finalize_loss(revealed, y[idx], nb)
-        losses.append(loss)
-
-        # -- stop flag --------------------------------------------------------
-        if len(losses) > 1 and abs(losses[-1] - losses[-2]) < cfg.tol:
-            flag = True
-        for p in names[1:]:
-            meter.add("C", p, "flag", 1)
-        it += 1
-
-    return TrainResult(weights=W, losses=losses, meter=meter,
-                       runtime_s=time.perf_counter() - t0, n_iter=it)
-
-
-def _slice_feats(f: protocols.EncodedFeatures, idx) -> protocols.EncodedFeatures:
-    return protocols.EncodedFeatures(
-        x_int=f.x_int[idx], exps=f.exps[idx], fx=f.fx, width=f.width)
+    from repro.runtime.scheduler import VFLScheduler
+    sched = VFLScheduler(parties, y, cfg, backend=backend,
+                         transport=transport)
+    return sched.run()
 
 
 # ---------------------------------------------------------------------------

@@ -55,7 +55,7 @@ def make_flash_decode(mesh, seq_axis: str | tuple, B: int, S: int,
                       G: int, Hg: int, hd: int, softcap=None):
     """Builds a shard_map'd decode-attention: cache stays sharded on its
     sequence dim over `seq_axis`; only (B,G,Hg,hd)-sized partials move."""
-    from jax import shard_map
+    from repro.distributed.shardmap_compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     axes = seq_axis if isinstance(seq_axis, tuple) else (seq_axis,)
@@ -92,11 +92,10 @@ def make_flash_decode(mesh, seq_axis: str | tuple, B: int, S: int,
 
 def _main() -> None:   # pragma: no cover (driver)
     import json
-    import jax
-    from jax.sharding import AxisType
+    import os
+    from repro.launch import mesh as mesh_lib
 
-    mesh = jax.make_mesh((16, 16), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = mesh_lib.make_production_mesh()
     # gemma3-4b decode_32k shapes: B=128, S=32768, G=4 kv, Hg=2, hd=256
     B, S, G, Hg, hd = 128, 32768, 4, 2, 256
     flash = make_flash_decode(mesh, ("data", "model"), B, S, G, Hg, hd,
@@ -106,13 +105,14 @@ def _main() -> None:   # pragma: no cover (driver)
              jax.ShapeDtypeStruct((B, S, G, hd), jnp.bfloat16),
              jax.ShapeDtypeStruct((), jnp.int32))
     compiled = jax.jit(flash).lower(*specs).compile()
-    from repro.launch.dryrun import parse_collectives
+    from repro.launch.dryrun import parse_collectives, peak_bytes
     census = parse_collectives(compiled.as_text())
     out = {"kind": "flash_decode_gemma3_layer", "mesh": "16x16",
-           "peak_bytes_per_dev": int(
-               compiled.memory_analysis().peak_memory_in_bytes),
+           "peak_bytes_per_dev": peak_bytes(
+               compiled.memory_analysis()),
            "collectives": census, "ok": True}
     print(json.dumps(out, indent=1))
+    os.makedirs("results", exist_ok=True)
     with open("results/flash_decode_gemma3.json", "w") as f:
         json.dump(out, f, indent=1)
 

@@ -1,0 +1,25 @@
+"""jax version compat for shard_map.
+
+Newer jax exports `jax.shard_map` (replication check kwarg `check_vma`);
+the pinned toolchain still ships it as `jax.experimental.shard_map`
+(kwarg `check_rep`).  This wrapper presents the new-style surface either
+way so the mesh-lowering code has one spelling.
+"""
+from __future__ import annotations
+
+import functools
+
+try:                                          # jax >= 0.6 style
+    from jax import shard_map as _shard_map
+    _REP_KW = "check_vma"
+except ImportError:                           # pinned toolchain
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _REP_KW = "check_rep"
+
+
+def shard_map(f=None, **kwargs):
+    if "check_vma" in kwargs and _REP_KW == "check_rep":
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if f is None:
+        return functools.partial(shard_map, **kwargs)
+    return _shard_map(f, **kwargs)

@@ -44,6 +44,17 @@ _COLL_RE = re.compile(
     r"(-start|-done)?\(")
 
 
+def peak_bytes(ma) -> int:
+    """Peak device memory from a CompiledMemoryStats, tolerating jax
+    versions that don't expose `peak_memory_in_bytes` (fall back to
+    args + outputs + temps — the steady-state resident set)."""
+    peak = getattr(ma, "peak_memory_in_bytes", None)
+    if peak:
+        return int(peak)
+    return int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes)
+
+
 def parse_collectives(hlo_text: str) -> dict:
     """Sum per-device result bytes of every collective op in the SPMD
     module, by op kind ('-done' halves of async pairs are skipped so
@@ -137,7 +148,7 @@ def run_cell(arch: str, cell_name: str, mesh, *, smoke: bool = False,
     compiled = lowered.compile()
     t_compile = time.time() - t0
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = costmodel.xla_cost_analysis(compiled)
     colls = parse_collectives(compiled.as_text())
     n_dev = mesh.devices.size
     costs = costmodel.cell_costs(cfg, cell, mesh)
@@ -150,7 +161,7 @@ def run_cell(arch: str, cell_name: str, mesh, *, smoke: bool = False,
         "n_devices": int(n_dev),
         "ok": True,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
-        "peak_bytes_per_dev": int(ma.peak_memory_in_bytes),
+        "peak_bytes_per_dev": peak_bytes(ma),
         "arg_bytes_per_dev": int(ma.argument_size_in_bytes),
         "temp_bytes_per_dev": int(ma.temp_size_in_bytes),
         "output_bytes_per_dev": int(ma.output_size_in_bytes),
@@ -202,13 +213,10 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.mesh_shape:
-        import jax as _jax
-        from jax.sharding import AxisType
         dims = tuple(int(x) for x in args.mesh_shape.split("x"))
         names = ("data", "model") if len(dims) == 2 else \
             ("pod", "data", "model")
-        meshes = [_jax.make_mesh(dims, names,
-                                 axis_types=(AxisType.Auto,) * len(dims))]
+        meshes = [mesh_lib._make_mesh(dims, names)]
     elif args.smoke:
         meshes = [mesh_lib.make_debug_mesh(),
                   mesh_lib.make_debug_mesh(multi_pod=True)]

@@ -23,7 +23,7 @@ import time              # noqa: E402
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
-from jax import shard_map                                  # noqa: E402
+from repro.distributed.shardmap_compat import shard_map    # noqa: E402
 
 from repro.crypto.bigint import Modulus, mont_mul, mont_one  # noqa: E402
 from repro.crypto import fixed_point                         # noqa: E402
@@ -31,8 +31,10 @@ from repro.crypto.ring import R64                            # noqa: E402
 from repro.crypto import ring                                # noqa: E402
 from repro.distributed.secure_ops import modmul_reduce       # noqa: E402
 from repro.launch import mesh as mesh_lib                    # noqa: E402
+from repro.launch.costmodel import xla_cost_analysis         # noqa: E402
 from repro.launch.dryrun import (parse_collectives,          # noqa: E402
-                                 roofline_terms)
+                                 peak_bytes, roofline_terms)
+from repro.runtime import messages as msg_lib                # noqa: E402
 
 
 def montmul_count(n_loc: int, m_loc: int, width: int, window: int,
@@ -178,9 +180,13 @@ def main() -> None:
 
     n, m, L2 = args.samples, args.features, mod.L
     u32 = jnp.uint32
+    # the [[⟨d⟩]] operand is exactly the runtime's P3.enc_d envelope,
+    # lowered pod-major (pod axis = party); locals (exps, own d-share)
+    # never cross the transport and are plain arrays.
+    enc_d_spec = msg_lib.EncD.mesh_payload_spec(2, n, L2)
     specs = (
         jax.ShapeDtypeStruct((2, n, m), u32),
-        jax.ShapeDtypeStruct((2, n, L2), u32),
+        enc_d_spec,
         jax.ShapeDtypeStruct((2, n), u32),
         jax.ShapeDtypeStruct((2, n), u32),
     )
@@ -194,7 +200,7 @@ def main() -> None:
     lowered = jax.jit(step, in_shardings=in_shardings).lower(*specs)
     compiled = lowered.compile()
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     colls = parse_collectives(compiled.as_text())
     # analytic roofline terms (HLO counts scan bodies once)
     if args.shard_mode == "feature":
@@ -208,6 +214,10 @@ def main() -> None:
                                                    // args.window)
     hbm = (n_loc * L2 * 4) * levels + n_loc * m_loc * 4
     coll = m_loc * L2 * 4 * max(16 .bit_length() - 1, 0)  # ⊕-ladder hops
+    # per-iteration cross-party traffic, synthesized from the same typed
+    # Message envelopes the live runtime routes (comm columns + rounds)
+    by_tag, rounds = msg_lib.iteration_traffic(
+        n_parties=2, nb=n, m_per_party=m, key_bits=args.key_bits)
     res = {
         "kind": "secure_efmvfl_grad_step",
         "mesh": "2x16x16", "key_bits": args.key_bits,
@@ -215,12 +225,17 @@ def main() -> None:
         "window": args.window, "shard_mode": args.shard_mode,
         "montmuls_per_dev": mm,
         "compile_s": round(time.time() - t0, 1),
-        "peak_bytes_per_dev": int(ma.peak_memory_in_bytes),
+        "peak_bytes_per_dev": peak_bytes(ma),
         "flops_per_dev": flops,
         "hbm_bytes_per_dev": float(hbm),
         "raw_hlo": {"flops": float(ca.get("flops", 0.0)),
                     "bytes": float(ca.get("bytes accessed", 0.0))},
         "collectives": colls,
+        "protocol_comm": {
+            "per_iteration_mb_by_tag": {k: v / 1e6
+                                        for k, v in sorted(by_tag.items())},
+            "per_iteration_rounds": rounds,
+        },
         **roofline_terms(flops, float(hbm), float(coll)),
         "ok": True,
     }

@@ -1,0 +1,20 @@
+"""Party runtime: actors + typed messages + pluggable transports.
+
+The deployment seam for EFMVFL — protocol code talks to a Transport
+instead of shared local variables, so the same actors run under the
+bit-exact local replay, the pipelined overlap schedule, or (future)
+real multi-host transports.
+"""
+from repro.runtime import messages
+from repro.runtime.party import CPState, DataParty, LabelParty, Party
+from repro.runtime.scheduler import (TransportDealer, VFLScheduler,
+                                     mask_bound_bits, validate_key_bits)
+from repro.runtime.transport import (LocalTransport, LockedRNG,
+                                     PipelinedTransport, Transport)
+
+__all__ = [
+    "messages", "Party", "DataParty", "LabelParty", "CPState",
+    "VFLScheduler", "TransportDealer", "mask_bound_bits",
+    "validate_key_bits", "Transport", "LocalTransport",
+    "PipelinedTransport", "LockedRNG",
+]

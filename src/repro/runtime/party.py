@@ -1,0 +1,274 @@
+"""Party actors for the EFMVFL runtime.
+
+Each actor owns only its local state — features, head weights, encoded
+fixed-point features, its view of the HE backend (its own key pair in a
+real deployment), and a handle on the protocol entropy source — and
+steps via `handle(msg) -> [Message]`.  Cross-party values only move as
+typed `runtime.messages` envelopes through a Transport; a party never
+reads another party's attributes.
+
+Roles: `LabelParty` is C (holds Y, computes the public loss, decides the
+stop flag); `DataParty` is a feature provider B_k.  Computing-party (CP)
+status rotates per iteration (Alg. 1 §4.3 — fixed or uniformly random
+selection), so the CP behaviour lives in `CPRole`, a mixin every party
+carries and activates only for iterations in which it is selected.
+
+Simulation note: the two CPs' *joint* share computations (Protocol 2 and
+the Beaver-multiplication legs of Protocol 4) are evaluated in-process
+by the scheduler over the pair's states, exactly like `mpc.beaver`; the
+openings they would exchange are accounted as `beaver_open` messages by
+the transport's dealer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import glm as glm_lib
+from repro.core import protocols
+from repro.crypto import fixed_point, ring
+from repro.crypto.ring import R64
+from repro.mpc import sharing
+from repro.runtime import messages as msg
+
+
+@dataclasses.dataclass
+class CPState:
+    """Per-iteration state a party holds only while it is a CP."""
+    index: int                          # 0 or 1: which share stream it owns
+    peer: str                           # the other CP
+    d_self: Optional[R64] = None        # ⟨d⟩ from Protocol 2
+    ct_self: object = None              # [[⟨d⟩]] under own key
+    z_acc: Optional[R64] = None         # Σ_p ⟨z_p⟩  (Protocol 1)
+    y_share: Optional[R64] = None
+    ez_list: list = dataclasses.field(default_factory=list)
+    l_self: Optional[R64] = None        # ⟨loss⟩ from Protocol 4
+
+
+class CPRole:
+    """Computing-party behaviour, active only when `self.cp` is set."""
+
+    cp: Optional[CPState] = None
+
+    def accumulate_share(self, m: msg.RingMessage) -> None:
+        st = self.cp
+        if isinstance(m, msg.ZShare):
+            st.z_acc = m.payload if st.z_acc is None \
+                else ring.add(st.z_acc, m.payload)
+        elif isinstance(m, msg.YShare):
+            st.y_share = m.payload
+        elif isinstance(m, msg.EzShare):
+            st.ez_list.append(m.payload)
+
+    def announce_enc_d(self) -> msg.EncD:
+        """Protocol 3 line 1: encrypt ⟨d⟩ under own key, send to the peer
+        (the broadcast to non-CPs reuses the same ciphertext)."""
+        st = self.cp
+        st.ct_self = self.backend.encrypt_share(self.name, st.d_self)
+        # line 2 (local): own term X_p^T ⟨d⟩_p seeds the gradient sum
+        self._grad_acc = protocols.local_grad_share(self._feats_b, st.d_self)
+        return msg.EncD(self.name, st.peer, st.ct_self,
+                        n_cts=self._nb, key_bits=self.backend.key_bits(self.name),
+                        key_owner=self.name)
+
+    def broadcast_enc_d(self, others: list[str]) -> list[msg.EncDBroadcast]:
+        st = self.cp
+        kb = self.backend.key_bits(self.name)
+        return [msg.EncDBroadcast(self.name, p, st.ct_self, n_cts=self._nb,
+                                  key_bits=kb, key_owner=self.name)
+                for p in others]
+
+    def _decrypt_unmask(self, m: msg.MaskedGrad) -> list[msg.Message]:
+        """Protocol 3 line 7 (key owner): decrypt + offset-correct with the
+        own d-share, return the ring share to the requester."""
+        w = protocols.decrypt_offset_corrected(
+            self.backend, self.name, m.payload, self.cp.d_self,
+            self._feats_b.width)
+        return [msg.UnmaskedShare(self.name, m.src, w)]
+
+
+class Party(CPRole):
+    """One EFMVFL participant (B_k); subclassed by LabelParty for C."""
+
+    def __init__(self, name: str, X: np.ndarray, cfg, backend, rng):
+        self.name = name
+        self.X = np.asarray(X, np.float64)
+        self.W = np.zeros(self.X.shape[1])
+        self.cfg = cfg
+        self.backend = backend
+        self.rng = rng
+        self.feats = protocols.EncodedFeatures.make(self.X, cfg.fx,
+                                                    cfg.exp_width)
+        self.stop = False
+        # per-iteration scratch
+        self.cp = None
+        self._idx = None
+        self._cps = ()
+        self._nb = 0
+        self._mask_bound = 0
+        self._feats_b = None
+        self._wx = None
+        self._grad_acc: Optional[R64] = None
+        self._masks: dict[str, R64] = {}
+        self._pending_unmask: set[str] = set()
+
+    # -- iteration lifecycle ------------------------------------------------
+    def begin_iteration(self, idx, cps: tuple[str, str], nb: int,
+                        mask_bound: int) -> None:
+        self._idx = idx
+        self._cps = cps
+        self._nb = nb
+        self._mask_bound = mask_bound
+        self._feats_b = self.feats.slice(idx)
+        self._wx = self.X[idx] @ self.W
+        self._masks = {}
+        self._grad_acc = None
+        if self.name in cps:
+            i = cps.index(self.name)
+            self.cp = CPState(index=i, peer=cps[1 - i])
+            self._pending_unmask = {self.cp.peer}
+        else:
+            self.cp = None
+            self._grad_acc = ring.zeros((self.X.shape[1],))
+            self._pending_unmask = set(cps)
+
+    # -- Protocol 1 ---------------------------------------------------------
+    def share_z(self, key) -> list[msg.Message]:
+        val = fixed_point.encode(self._wx, self.cfg.f)
+        s0, s1 = sharing.share(val, key)
+        return [msg.ZShare(self.name, self._cps[0], s0),
+                msg.ZShare(self.name, self._cps[1], s1)]
+
+    def share_ez(self, key, exp_sign: int) -> list[msg.Message]:
+        ezp = np.exp(np.clip(exp_sign * self._wx, -30, 8))
+        s0, s1 = sharing.share(fixed_point.encode(ezp, self.cfg.f), key)
+        return [msg.EzShare(self.name, self._cps[0], s0),
+                msg.EzShare(self.name, self._cps[1], s1)]
+
+    # -- message dispatch ---------------------------------------------------
+    def handle(self, m: msg.Message) -> list[msg.Message]:
+        if isinstance(m, (msg.ZShare, msg.YShare, msg.EzShare)):
+            self.accumulate_share(m)
+            return []
+        if isinstance(m, (msg.EncD, msg.EncDBroadcast)):
+            return self._produce_masked_grad(m)
+        if isinstance(m, msg.MaskedGrad):
+            return self._decrypt_unmask(m)
+        if isinstance(m, msg.UnmaskedShare):
+            self._absorb_unmasked(m)
+            return []
+        if isinstance(m, msg.LossShare):
+            return self._absorb_loss(m)
+        if isinstance(m, msg.Flag):
+            self.stop = m.stop
+            return []
+        if isinstance(m, msg.WxShare):
+            return self._absorb_wx(m)
+        return []
+
+    # -- Protocol 3 ---------------------------------------------------------
+    def _produce_masked_grad(self, m: msg.Message) -> list[msg.Message]:
+        """Feature owner's leg: matvec under the d-owner's key + mask."""
+        owner = m.key_owner
+        enc_masked, Rr = protocols.masked_matvec(
+            self.backend, owner, m.payload, self._feats_b,
+            self._mask_bound, self.rng)
+        self._masks[owner] = Rr
+        return [msg.MaskedGrad(self.name, owner, enc_masked,
+                               n_cts=self.X.shape[1],
+                               key_bits=self.backend.key_bits(owner),
+                               key_owner=owner)]
+
+    def _absorb_unmasked(self, m: msg.UnmaskedShare) -> None:
+        Rr = self._masks.pop(m.src)
+        term = ring.sub(m.payload, Rr)
+        self._grad_acc = term if self._grad_acc is None \
+            else ring.add(self._grad_acc, term)
+        self._pending_unmask.discard(m.src)
+        if not self._pending_unmask:
+            self._apply_update()
+
+    def _apply_update(self) -> None:
+        """Eq. 6 — local: decode the (fx+f)-fractional-bit gradient, scale
+        by 1/m, step.  Weights never leave the party."""
+        g = fixed_point.decode(self._grad_acc, self.cfg.fx + self.cfg.f) \
+            / self._nb
+        self.W = self.W - self.cfg.lr * g
+
+    # -- Protocol 4 ---------------------------------------------------------
+    def _absorb_loss(self, m: msg.LossShare) -> list[msg.Message]:
+        """CP0's leg: reconstruct the loss sum; route it to C."""
+        total = sharing.reconstruct(self.cp.l_self, m.payload)
+        return [msg.LossShare(self.name, "C", total)]
+
+    # -- inference ----------------------------------------------------------
+    def predict_share(self, X_new: np.ndarray | None = None) -> np.ndarray:
+        """Local score share X_p W_p — the runtime-backed serving path."""
+        X = self.X if X_new is None else np.asarray(X_new, np.float64)
+        return X @ self.W
+
+    def wx_share_msg(self, X_new: np.ndarray, dst: str = "C") -> msg.WxShare:
+        """Score share as a wire message (8-byte float64 per row)."""
+        wx = self.predict_share(X_new)
+        return msg.WxShare(self.name, dst, wx, n_elems=len(wx))
+
+    def _absorb_wx(self, m: msg.WxShare) -> list[msg.Message]:
+        return []
+
+
+class DataParty(Party):
+    """B_k — a feature provider; pure Party behaviour."""
+
+
+class LabelParty(Party):
+    """C — holds the label, finalizes the public loss, owns the stop flag."""
+
+    def __init__(self, name: str, X: np.ndarray, y: np.ndarray, cfg,
+                 backend, rng, model: glm_lib.GLM):
+        super().__init__(name, X, cfg, backend, rng)
+        self.y = np.asarray(y, np.float64)
+        self.model = model
+        self.losses: list[float] = []
+        self._wx_acc: Optional[np.ndarray] = None
+        self._wx_expected = 0
+
+    def share_y(self, key) -> list[msg.Message]:
+        val = fixed_point.encode(self.y[self._idx], self.cfg.f)
+        s0, s1 = sharing.share(val, key)
+        return [msg.YShare(self.name, self._cps[0], s0),
+                msg.YShare(self.name, self._cps[1], s1)]
+
+    def _absorb_loss(self, m: msg.LossShare) -> list[msg.Message]:
+        if self.cp is not None and self.cp.index == 0:
+            # C is CP0: reconstruct and finalize in one step
+            total = sharing.reconstruct(self.cp.l_self, m.payload)
+        else:
+            total = m.payload               # forwarded (reconstructed) by CP0
+        revealed = float(fixed_point.decode(total, self.cfg.f))
+        self.losses.append(self.model.finalize_loss(
+            revealed, self.y[self._idx], self._nb))
+        return []
+
+    def emit_flags(self, others: list[str]) -> list[msg.Message]:
+        """Alg. 1 line 27: |Δloss| < tol ⇒ stop, broadcast every iter."""
+        flag = (len(self.losses) > 1
+                and abs(self.losses[-1] - self.losses[-2]) < self.cfg.tol)
+        self.stop = flag
+        return [msg.Flag(self.name, p, stop=flag) for p in others]
+
+    # -- inference (serving path) ------------------------------------------
+    def begin_inference(self, n_rows: int, n_parties: int) -> None:
+        self._wx_acc = np.zeros(n_rows)
+        self._wx_expected = n_parties - 1
+
+    def _absorb_wx(self, m: msg.WxShare) -> list[msg.Message]:
+        self._wx_acc = self._wx_acc + np.asarray(m.payload)
+        self._wx_expected -= 1
+        return []
+
+    def finish_inference(self, X_own: np.ndarray) -> np.ndarray:
+        assert self._wx_expected == 0, "missing party score shares"
+        wx = self._wx_acc + self.predict_share(X_own)
+        return self.model.predict(wx)

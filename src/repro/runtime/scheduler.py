@@ -1,0 +1,198 @@
+"""Algorithm 1 as a thin scheduler over party actors.
+
+The scheduler owns only what the algorithm's *conductor* owns: the batch
+schedule, the per-iteration CP selection, the jax key ladder for
+Protocol-1 share randomness, and the phase ordering.  All cross-party
+values move as typed messages through the Transport, which meters every
+`wire_bytes()` and counts communication rounds; all party state lives in
+the actors.
+
+The two CPs' joint share arithmetic (Protocol 2, the Beaver legs of
+Protocols 1 and 4) is evaluated in-process over the CP pair's states —
+the same simulation convention as `mpc.beaver` — with the openings the
+parties would exchange accounted through the transport's dealer.
+
+With `LocalTransport` this replays the pre-refactor `train_vfl`
+simulation bit-for-bit (losses, weights, per-tag meter bytes — see
+tests/test_runtime_parity.py); `PipelinedTransport` overlaps the
+data-independent Protocol-3 legs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core import glm as glm_lib
+from repro.core import protocols
+from repro.mpc import beaver, truncation
+from repro.runtime import messages as msg
+from repro.runtime.party import DataParty, LabelParty, Party
+from repro.runtime.transport import LocalTransport, Transport
+
+
+class TransportDealer:
+    """Beaver triples whose online openings (2 values × 2 directions per
+    elementwise product) are accounted as `beaver_open` messages."""
+
+    def __init__(self, dealer, transport: Transport, a: str, b: str):
+        self._dealer = dealer
+        self._transport = transport
+        self._a, self._b = a, b
+
+    def elementwise(self, shape):
+        n = int(np.prod(shape))
+        self._transport.account(msg.BeaverOpen(self._a, self._b,
+                                               n_elems=2 * n))
+        self._transport.account(msg.BeaverOpen(self._b, self._a,
+                                               n_elems=2 * n))
+        self._transport.exchange_round()
+        return self._dealer.elementwise(shape)
+
+
+def mask_bound_bits(cfg) -> int:
+    """v ≤ n·2^width·2^64 → statistical-hiding mask bound."""
+    return 64 + cfg.exp_width + int(np.ceil(np.log2(cfg.batch_size))) + 1
+
+
+def validate_key_bits(cfg, bound: int) -> None:
+    """Both backends must satisfy the Paillier plaintext-capacity bound:
+    a mock run whose key couldn't carry its own masked values would
+    report wire bytes a real deployment can't achieve."""
+    need = bound + protocols.STAT_SEC + 2
+    if cfg.key_bits < need:
+        raise ValueError(f"key_bits={cfg.key_bits} too small; need >= {need}")
+
+
+class VFLScheduler:
+    """Drives Algorithm 1 over Party actors.  `party_data[0]` must be C."""
+
+    def __init__(self, party_data: Sequence, y: np.ndarray, cfg,
+                 backend=None, transport: Transport | None = None):
+        from repro.core import trainer as trainer_lib  # config/backends
+        assert party_data[0].name == "C"
+        self.cfg = cfg
+        self.model = glm_lib.GLMS[cfg.glm]
+        self.transport = transport if transport is not None \
+            else LocalTransport()
+        self.names = [p.name for p in party_data]
+        rng = np.random.default_rng(cfg.seed + 90001)   # protocol randomness
+        self.rng = self.transport.wrap_rng(rng)
+        self.select_rng = self.transport.cp_select_rng(self.rng, cfg.seed)
+        self.batch_rng = np.random.default_rng(cfg.seed)  # batch schedule
+        self.jkey = jax.random.key(cfg.seed)              # (matches oracle)
+        if backend is None:
+            backend = trainer_lib.make_backend(cfg, self.names, self.rng)
+        self.backend = backend
+        self.dealer = beaver.DealerTripleSource(seed=cfg.seed + 1)
+        self.mask_bound = mask_bound_bits(cfg)
+        validate_key_bits(cfg, self.mask_bound)
+        self.parties: list[Party] = [
+            LabelParty(party_data[0].name, party_data[0].X, y, cfg,
+                       backend, self.rng, self.model)]
+        self.parties += [DataParty(p.name, p.X, cfg, backend, self.rng)
+                         for p in party_data[1:]]
+        self.by_name = {p.name: p for p in self.parties}
+        self.transport.bind(self.parties)
+        self.n_total = self.parties[0].X.shape[0]
+
+    @property
+    def label_party(self) -> LabelParty:
+        return self.parties[0]
+
+    # -- one iteration ------------------------------------------------------
+    def _select_cps(self) -> tuple[str, str]:
+        if self.cfg.cp_selection == "random":
+            i = self.select_rng.choice(len(self.names), size=2, replace=False)
+            return (self.names[i[0]], self.names[i[1]])
+        return (self.names[0], self.names[1])
+
+    def _iteration(self, idx) -> None:
+        cfg, tp = self.cfg, self.transport
+        nb = len(idx)
+        cps = self._select_cps()
+        noncps = [p.name for p in self.parties if p.name not in cps]
+        self.jkey, *subkeys = jax.random.split(
+            self.jkey, len(self.names) * 2 + 3)
+        for p in self.parties:
+            p.begin_iteration(idx, cps, nb, self.mask_bound)
+        cp0, cp1 = self.by_name[cps[0]], self.by_name[cps[1]]
+
+        # -- Protocol 1: share intermediate results -------------------------
+        for i, p in enumerate(self.parties):
+            tp.post_all(p.share_z(subkeys[i]))
+        tp.post_all(self.label_party.share_y(subkeys[len(self.names)]))
+        tp.pump(order=list(cps))
+        mdealer = TransportDealer(self.dealer, tp, cps[0], cps[1])
+        ez = None
+        if self.model.needs_exp:
+            for i, p in enumerate(self.parties):
+                tp.post_all(p.share_ez(subkeys[len(self.names) + 1 + i],
+                                       self.model.exp_sign))
+            tp.pump(order=list(cps))
+            # e^{Σz_p} = Π e^{z_p}: chained Beaver products over the pair
+            e0, e1 = cp0.cp.ez_list, cp1.cp.ez_list
+            ez = (e0[0], e1[0])
+            for j in range(1, len(e0)):
+                prod = beaver.mul(ez, (e0[j], e1[j]),
+                                  *mdealer.elementwise((nb,)))
+                ez = truncation.trunc_pair(prod[0], prod[1], cfg.f)
+
+        ctx = glm_lib.ShareCtx(z=(cp0.cp.z_acc, cp1.cp.z_acc),
+                               y=(cp0.cp.y_share, cp1.cp.y_share),
+                               ez=ez, f=cfg.f, dealer=mdealer)
+
+        # -- Protocol 2: gradient-operator on shares ------------------------
+        d0, d1 = self.model.gradient_operator(ctx)
+        cp0.cp.d_self, cp1.cp.d_self = d0, d1
+
+        # -- Protocol 3: secure gradients -----------------------------------
+        tp.post(cp0.announce_enc_d())
+        tp.post(cp1.announce_enc_d())
+        if tp.overlaps_p3:
+            # broadcasts are data-independent of the CP exchange: same sweep
+            for cp in (cp0, cp1):
+                tp.post_all(cp.broadcast_enc_d(noncps))
+            tp.pump(order=[*cps, *noncps])
+        else:
+            tp.pump(order=list(cps))
+            for p in noncps:
+                for cp in (cp0, cp1):
+                    tp.post_all(cp.broadcast_enc_d([p]))
+            tp.pump(order=[*noncps, *cps])
+
+        # -- Protocol 4: secure loss ----------------------------------------
+        l0, l1 = self.model.loss_shares(ctx)
+        cp0.cp.l_self = l0
+        tp.post(msg.LossShare(cps[1], cps[0], l1))
+        tp.pump(order=list(cps))
+
+        # -- stop flag ------------------------------------------------------
+        tp.post_all(self.label_party.emit_flags(self.names[1:]))
+        tp.pump()
+
+    # -- training loop ------------------------------------------------------
+    def run(self):
+        from repro.core.trainer import TrainResult
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        order = self.batch_rng.permutation(self.n_total)
+        cursor = 0
+        it = 0
+        while it < cfg.max_iter and not self.label_party.stop:
+            if cursor + cfg.batch_size > self.n_total:
+                order = self.batch_rng.permutation(self.n_total)
+                cursor = 0
+            idx = order[cursor:cursor + cfg.batch_size]
+            cursor += cfg.batch_size
+            self._iteration(idx)
+            it += 1
+        return TrainResult(
+            weights={p.name: p.W for p in self.parties},
+            losses=list(self.label_party.losses),
+            meter=self.transport.meter,
+            runtime_s=time.perf_counter() - t0,
+            n_iter=it,
+            rounds=self.transport.rounds)

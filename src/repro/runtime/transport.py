@@ -1,0 +1,164 @@
+"""Pluggable transports for the party runtime.
+
+A Transport is the only place communication happens: parties hand it
+typed `Message` envelopes (`post`), it meters their `wire_bytes()` and
+queues them, and `pump()` delivers them to the recipients' `handle()`
+until the network is quiet.  One pump *sweep* delivers every message
+that was in flight when the sweep started — i.e. one network latency
+step — so `rounds` counts the protocol's communication rounds (the
+paper's comm-rounds columns) for free.
+
+* `LocalTransport` — bit-identical replay of the original single-process
+  simulation: messages are delivered sequentially in a deterministic
+  order, and shared-randomness consumption matches the seed trainer
+  draw-for-draw.
+* `PipelinedTransport` — overlaps the data-independent legs of
+  Protocol 3: the CP↔CP encrypted-gradient exchange and the CP→non-CP
+  broadcasts enter the same sweep (they only depend on the Protocol-2
+  output d), and each sweep's per-party handler work runs on a thread
+  pool, so the two CPs' HE matvecs overlap the non-CP matvecs on real
+  hardware.  Masks are drawn behind a lock and cancel exactly, so the
+  trained model is bit-identical to LocalTransport under fixed CP
+  selection; CP *selection* uses a dedicated stream so the trajectory
+  stays deterministic regardless of thread interleaving.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core.comm import CommMeter
+from repro.runtime.messages import Message
+
+
+class LockedRNG:
+    """Thread-safe proxy over a np.random.Generator: every method call is
+    serialized, so concurrent handlers can share one entropy source."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+        self._lock = threading.Lock()
+
+    def __getattr__(self, name):
+        attr = getattr(self._rng, name)
+        if not callable(attr):
+            return attr
+        lock = self._lock
+
+        def locked(*args, **kwargs):
+            with lock:
+                return attr(*args, **kwargs)
+
+        return locked
+
+
+class Transport:
+    """Base: metering + FIFO inboxes + sweep-based delivery."""
+
+    #: whether the Protocol-3 CP exchange and non-CP broadcasts may share
+    #: a sweep (they are data-independent; the local replay keeps them
+    #: serial to match the seed trainer's draw order).
+    overlaps_p3 = False
+
+    def __init__(self, meter: CommMeter | None = None):
+        self.meter = meter if meter is not None else CommMeter()
+        self.rounds = 0
+        self._inbox: dict[str, collections.deque] = collections.defaultdict(
+            collections.deque)
+        self._parties: dict[str, object] = {}
+
+    # -- wiring -------------------------------------------------------------
+    def bind(self, parties) -> None:
+        self._parties = {p.name: p for p in parties}
+
+    def wrap_rng(self, rng: np.random.Generator):
+        """Hook: make the shared protocol generator safe for this
+        transport's execution model."""
+        return rng
+
+    def cp_select_rng(self, shared_rng, seed: int):
+        """Generator used for per-iteration CP selection.  The local
+        replay shares the protocol stream (seed-trainer parity); the
+        pipelined transport gets a dedicated stream so concurrent mask
+        draws can't shift the selection trajectory."""
+        return shared_rng
+
+    # -- sending ------------------------------------------------------------
+    def account(self, msg: Message) -> None:
+        """Meter a message that is applied in-place by joint simulation
+        (e.g. Beaver openings evaluated inside mpc.beaver.mul)."""
+        self.meter.add(msg.src, msg.dst, msg.tag, msg.wire_bytes())
+
+    def post(self, msg: Message) -> None:
+        """Meter + enqueue.  A message to oneself is a local handoff:
+        delivered, never metered."""
+        if msg.src != msg.dst:
+            self.account(msg)
+        self._inbox[msg.dst].append(msg)
+
+    def post_all(self, msgs) -> None:
+        for m in msgs or ():
+            self.post(m)
+
+    def exchange_round(self) -> None:
+        """Count one latency step that carries no queued message (joint
+        Beaver openings)."""
+        self.rounds += 1
+
+    # -- delivery -----------------------------------------------------------
+    def pump(self, order: list[str] | None = None) -> None:
+        """Deliver until quiet.  Each sweep delivers only the messages
+        present at sweep start; handler outputs join the next sweep."""
+        priority = list(order or [])
+        priority += [n for n in self._parties if n not in priority]
+        while any(self._inbox[n] for n in self._parties):
+            self.rounds += 1
+            snapshot = [(n, len(self._inbox[n])) for n in priority
+                        if self._inbox[n]]
+            self._sweep(snapshot)
+
+    def _deliver_one(self, name: str, count: int) -> list[Message]:
+        party = self._parties[name]
+        out: list[Message] = []
+        for _ in range(count):
+            out.extend(party.handle(self._inbox[name].popleft()) or ())
+        return out
+
+    def _sweep(self, snapshot) -> None:
+        for name, count in snapshot:
+            self.post_all(self._deliver_one(name, count))
+
+
+class LocalTransport(Transport):
+    """Sequential in-process delivery; replays the seed simulation
+    bit-for-bit (losses, weights, and per-tag meter bytes)."""
+
+
+class PipelinedTransport(Transport):
+    """Thread-pooled sweeps + merged Protocol-3 send phase."""
+
+    overlaps_p3 = True
+
+    def __init__(self, meter: CommMeter | None = None,
+                 max_workers: int | None = None):
+        super().__init__(meter)
+        self._pool = ThreadPoolExecutor(max_workers=max_workers or 8)
+
+    def wrap_rng(self, rng: np.random.Generator):
+        return LockedRNG(rng)
+
+    def cp_select_rng(self, shared_rng, seed: int):
+        return np.random.default_rng(seed + 90002)
+
+    def _sweep(self, snapshot) -> None:
+        if len(snapshot) <= 1:
+            for name, count in snapshot:
+                self.post_all(self._deliver_one(name, count))
+            return
+        futs = [self._pool.submit(self._deliver_one, name, count)
+                for name, count in snapshot]
+        for f in futs:
+            self.post_all(f.result())

@@ -1,4 +1,6 @@
-"""Serving runtime: continuous batching over slot-stacked KV caches."""
-from repro.serve.engine import Request, ServeEngine
+"""Serving runtimes: continuous batching over slot-stacked KV caches
+(LM decode) and micro-batched federated GLM scoring (EFMVFL actors)."""
+from repro.serve.engine import (Request, ScoreRequest, ServeEngine,
+                                VFLScoringEngine)
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "VFLScoringEngine", "ScoreRequest"]

@@ -119,3 +119,76 @@ class ServeEngine:
                 break
             self.step()
         return self.finished
+
+
+# ---------------------------------------------------------------------------
+# Federated GLM scoring (EFMVFL runtime-backed serving path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScoreRequest:
+    rid: int
+    features: dict[str, np.ndarray]   # party name -> (m_p,) feature slice
+    prediction: Optional[float] = None
+
+
+class VFLScoringEngine:
+    """Serves a trained federated GLM with the same actor/message/transport
+    stack the trainer runs on.
+
+    Requests carry vertically-split feature rows (one slice per party).
+    The engine micro-batches them; each party computes its local score
+    share X_p W_p via `Party.predict_share` and ships it to C as an
+    `infer.wx_share` message through the transport (metered + round-
+    counted like training traffic); C sums the shares and applies the
+    inverse link.  Raw features and per-party weights never move."""
+
+    def __init__(self, parties, transport=None, max_batch: int = 64):
+        from repro.runtime import LocalTransport
+        from repro.runtime.party import LabelParty
+        assert isinstance(parties[0], LabelParty), \
+            "parties[0] must be the label party C (e.g. from a VFLScheduler)"
+        self.parties = list(parties)
+        self.label = self.parties[0]
+        self.transport = transport if transport is not None \
+            else LocalTransport()
+        self.transport.bind(self.parties)
+        self.max_batch = max_batch
+        self.queue: deque[ScoreRequest] = deque()
+        self.finished: list[ScoreRequest] = []
+        self._next_rid = 0
+
+    def submit(self, features: dict[str, np.ndarray]) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(ScoreRequest(rid, features))
+        return rid
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue)
+
+    def step(self) -> int:
+        """Score one micro-batch.  Returns the number of requests served."""
+        batch = [self.queue.popleft()
+                 for _ in range(min(self.max_batch, len(self.queue)))]
+        if not batch:
+            return 0
+        X = {p.name: np.stack([r.features[p.name] for r in batch])
+             for p in self.parties}
+        self.label.begin_inference(len(batch), len(self.parties))
+        for p in self.parties:
+            if p.name != self.label.name:
+                self.transport.post(p.wx_share_msg(X[p.name],
+                                                   dst=self.label.name))
+        self.transport.pump(order=[self.label.name])
+        preds = self.label.finish_inference(X[self.label.name])
+        for r, pred in zip(batch, preds):
+            r.prediction = float(pred)
+            self.finished.append(r)
+        return len(batch)
+
+    def run(self) -> list[ScoreRequest]:
+        while self.busy:
+            self.step()
+        return self.finished

@@ -1,7 +1,7 @@
 """bigint limb arithmetic vs python-int oracles (incl. hypothesis sweeps)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -111,6 +111,7 @@ def test_u64_bits_msb():
         assert (bits[i] == want).all()
 
 
+@pytest.mark.slow
 def test_crt_decrypt_equals_plain():
     """CRT decryption (≈4× cheaper) is bit-identical to plain decryption."""
     key = paillier.keygen(192, seed=13)

@@ -1,6 +1,6 @@
 """Z_2^64 (hi,lo)-pair arithmetic vs numpy uint64 oracles."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

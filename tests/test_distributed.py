@@ -82,14 +82,13 @@ def test_modmul_reduce_multidevice():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.crypto import bigint
 from repro.crypto.bigint import Modulus
 from repro.distributed.secure_ops import make_modmul_reduce_shardmap
 
 n = (1 << 61) - 1
 mod = Modulus.make(n)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 rng = np.random.default_rng(1)
 vals = [int(rng.integers(1, 1 << 60)) for _ in range(8)]
 R = 1 << (12 * mod.L)
@@ -133,7 +132,6 @@ def test_elastic_reshard_subprocess():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs import registry
 from repro.distributed import elastic
 from repro.models import registry as models
@@ -145,8 +143,7 @@ toks = np.zeros((4, 8), np.int32)
 outs = {}
 plans = {}
 for tag, shape in [("small", (2, 4)), ("big", (4, 2))]:
-    mesh = jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = jax.make_mesh(shape, ("data", "model"))
     params = elastic.replace_onto_mesh(params_host, mesh)
     logits, _ = jax.jit(lambda p, t: api.prefill(p, t, max_len=16))(
         params, jnp.asarray(toks))

@@ -61,12 +61,11 @@ def test_flash_decode_shardmap_8dev():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.distributed import flash_decode
 from repro.models import attention
 from repro.models.attention import AttnSpec, KVCache
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 rng = np.random.default_rng(1)
 B, G, Hg, hd, S = 2, 2, 2, 8, 64
 q = jnp.asarray(rng.normal(size=(B, G, Hg, hd)), jnp.float32)

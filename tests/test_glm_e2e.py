@@ -37,6 +37,7 @@ def test_lr_two_party_matches_centralized():
     assert res.meter.total_mb > 0
 
 
+@pytest.mark.slow
 def test_lr_real_paillier_small():
     """Full Algorithm 1 with genuine Paillier (small but secure-shaped)."""
     X, y = synthetic.credit_default(n=200, d=8, seed=5)

@@ -1,6 +1,7 @@
 """MPC layer: sharing, Beaver multiplication, truncation statistics."""
 import jax
 import numpy as np
+import pytest
 
 from repro.crypto import fixed_point, paillier, ring
 from repro.mpc import beaver, sharing, truncation
@@ -61,6 +62,7 @@ def test_beaver_dot():
     assert int(got) == int((x * y).sum())
 
 
+@pytest.mark.slow
 def test_paillier_triples():
     key = paillier.keygen(256, seed=21)
     t0, t1 = beaver.paillier_triple((5,), key, np.random.default_rng(2),

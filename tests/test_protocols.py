@@ -101,10 +101,9 @@ def test_protocol3_cp_matches_oracle_mock():
     n, m = 200, 6
     X, d, feats, d0, d1 = _p3_setup(n, m, 15)
     backend = protocols.MockHEBackend(1024)
-    meter = CommMeter()
     ct1 = backend.encrypt_share("B1", d1)
     g = protocols.secure_gradient_cp(
-        backend, meter, p0="C", p1="B1", feats=feats,
+        backend, p0="C", p1="B1", feats=feats,
         d_self=d0, d_other_ct=ct1, d_other_share=d1,
         mask_bound_bits=64 + W + 9, rng=np.random.default_rng(5))
     got = fixed_point.decode(g, FX + F)
@@ -122,10 +121,9 @@ def test_protocol3_mock_equals_paillier_bitwise():
     mbackend = protocols.MockHEBackend(256)
     outs = {}
     for name, backend in [("paillier", pbackend), ("mock", mbackend)]:
-        meter = CommMeter()
         ct1 = backend.encrypt_share("B1", d1)
         g = protocols.secure_gradient_cp(
-            backend, meter, p0="C", p1="B1", feats=feats,
+            backend, p0="C", p1="B1", feats=feats,
             d_self=d0, d_other_ct=ct1, d_other_share=d1,
             mask_bound_bits=64 + W + 6, rng=np.random.default_rng(77))
         outs[name] = ring.to_numpy_u64(g)
@@ -136,11 +134,10 @@ def test_protocol3_noncp():
     n, m = 64, 5
     X, d, feats, d0, d1 = _p3_setup(n, m, 17)
     backend = protocols.MockHEBackend(1024)
-    meter = CommMeter()
     cts = {"C": backend.encrypt_share("C", d0),
            "B1": backend.encrypt_share("B1", d1)}
     g = protocols.secure_gradient_noncp(
-        backend, meter, party="B2", cps=("C", "B1"), feats=feats,
+        backend, party="B2", cps=("C", "B1"), feats=feats,
         d_cts=cts, d_shares={"C": d0, "B1": d1},
         mask_bound_bits=64 + W + 7, rng=np.random.default_rng(6))
     got = fixed_point.decode(g, FX + F)
@@ -159,7 +156,7 @@ def test_comm_meter_accounting():
 # Property-based protocol invariants (hypothesis)
 # ---------------------------------------------------------------------------
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @settings(max_examples=20, deadline=None)
@@ -178,7 +175,7 @@ def test_property_p3_gradient_exact(xs, seed):
                            jax.random.key(seed % 1000))
     backend = protocols.MockHEBackend(1024)
     g = protocols.secure_gradient_cp(
-        backend, CommMeter(), p0="C", p1="B1", feats=feats,
+        backend, p0="C", p1="B1", feats=feats,
         d_self=d0, d_other_ct=backend.encrypt_share("B1", d1),
         d_other_share=d1, mask_bound_bits=64 + W + 6,
         rng=np.random.default_rng(seed))

@@ -1,0 +1,280 @@
+"""The refactor's invariant: the actor runtime (`repro.runtime`) must
+reproduce the pre-refactor monolithic `train_vfl` simulation exactly —
+losses, final weights, and per-tag CommMeter byte totals — for a fixed
+seed.  The oracle below is a frozen copy of the seed trainer's loop
+(hand-placed meter calls and all), kept here as a test fixture so the
+live code path can stay message-routed."""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import glm as glm_lib
+from repro.core import metrics, protocols, trainer
+from repro.core.comm import CommMeter
+from repro.core.trainer import PartyData, VFLConfig
+from repro.crypto import fixed_point, ring
+from repro.crypto.ring import R64
+from repro.data import synthetic, vertical
+from repro.mpc import beaver, sharing, truncation
+from repro.runtime import LocalTransport, PipelinedTransport, VFLScheduler
+
+
+# ---------------------------------------------------------------------------
+# Frozen seed trainer (pre-refactor simulation, verbatim message flow)
+# ---------------------------------------------------------------------------
+
+class _MeteredDealer:
+    def __init__(self, dealer, meter, a, b):
+        self._dealer = dealer
+        self._meter = meter
+        self._a, self._b = a, b
+
+    def elementwise(self, shape):
+        n = int(np.prod(shape))
+        self._meter.ring(self._a, self._b, "beaver_open", 2 * n)
+        self._meter.ring(self._b, self._a, "beaver_open", 2 * n)
+        return self._dealer.elementwise(shape)
+
+
+def _share_to_cps(val, owner, cps, meter, key, tag):
+    s0, s1 = sharing.share(val, key)
+    n = int(np.prod(val.lo.shape))
+    if owner == cps[0]:
+        meter.ring(owner, cps[1], tag, n)
+    elif owner == cps[1]:
+        meter.ring(owner, cps[0], tag, n)
+    else:
+        meter.ring(owner, cps[0], tag, n)
+        meter.ring(owner, cps[1], tag, n)
+    return s0, s1
+
+
+def _seed_train_vfl(parties, y, cfg, backend=None):
+    """Frozen copy of the seed `train_vfl` (the pre-runtime monolith)."""
+    assert parties[0].name == "C"
+    model = glm_lib.GLMS[cfg.glm]
+    names = [p.name for p in parties]
+    rng = np.random.default_rng(cfg.seed + 90001)
+    batch_rng = np.random.default_rng(cfg.seed)
+    jkey = jax.random.key(cfg.seed)
+    meter = CommMeter()
+    if backend is None:
+        backend = trainer.make_backend(cfg, names, rng)
+    dealer = beaver.DealerTripleSource(seed=cfg.seed + 1)
+
+    n_total = parties[0].X.shape[0]
+    W = {p.name: np.zeros(p.X.shape[1]) for p in parties}
+    feats = {p.name: protocols.EncodedFeatures.make(p.X, cfg.fx,
+                                                    cfg.exp_width)
+             for p in parties}
+    mask_bound = 64 + cfg.exp_width + int(np.ceil(np.log2(cfg.batch_size))) + 1
+
+    losses = []
+    flag = False
+    order = batch_rng.permutation(n_total)
+    cursor = 0
+    it = 0
+    while it < cfg.max_iter and not flag:
+        if cursor + cfg.batch_size > n_total:
+            order = batch_rng.permutation(n_total)
+            cursor = 0
+        idx = order[cursor:cursor + cfg.batch_size]
+        cursor += cfg.batch_size
+        nb = len(idx)
+        if cfg.cp_selection == "random":
+            cp_idx = rng.choice(len(names), size=2, replace=False)
+            cps = (names[cp_idx[0]], names[cp_idx[1]])
+        else:
+            cps = (names[0], names[1])
+        jkey, *subkeys = jax.random.split(jkey, len(names) * 2 + 3)
+
+        z_shares = [None, None]
+        ez_shares = None
+        for i, p in enumerate(parties):
+            zp = p.X[idx] @ W[p.name]
+            s0, s1 = _share_to_cps(fixed_point.encode(zp, cfg.f), p.name,
+                                   cps, meter, subkeys[i], "P1.z_share")
+            z_shares[0] = s0 if z_shares[0] is None else ring.add(z_shares[0], s0)
+            z_shares[1] = s1 if z_shares[1] is None else ring.add(z_shares[1], s1)
+        y_shares = _share_to_cps(fixed_point.encode(y[idx], cfg.f), "C",
+                                 cps, meter, subkeys[len(names)], "P1.y_share")
+        mdealer = _MeteredDealer(dealer, meter, cps[0], cps[1])
+        if model.needs_exp:
+            for i, p in enumerate(parties):
+                ezp = np.exp(np.clip(model.exp_sign * (p.X[idx] @ W[p.name]),
+                                     -30, 8))
+                es = _share_to_cps(fixed_point.encode(ezp, cfg.f), p.name,
+                                   cps, meter,
+                                   subkeys[len(names) + 1 + i], "P1.ez_share")
+                if ez_shares is None:
+                    ez_shares = es
+                else:
+                    prod = beaver.mul(ez_shares, es, *mdealer.elementwise((nb,)))
+                    ez_shares = truncation.trunc_pair(prod[0], prod[1], cfg.f)
+
+        ctx = glm_lib.ShareCtx(z=tuple(z_shares), y=y_shares, ez=ez_shares,
+                               f=cfg.f, dealer=mdealer)
+        d0, d1 = model.gradient_operator(ctx)
+
+        ct0 = backend.encrypt_share(cps[0], d0)
+        ct1 = backend.encrypt_share(cps[1], d1)
+        meter.cipher(cps[1], cps[0], "P3.enc_d", nb, backend.key_bits(cps[1]))
+        meter.cipher(cps[0], cps[1], "P3.enc_d", nb, backend.key_bits(cps[0]))
+        grads = {}
+        for p0, p1, dS, dO, ctO in ((cps[0], cps[1], d0, d1, ct1),
+                                    (cps[1], cps[0], d1, d0, ct0)):
+            m = feats[p0].x_int.shape[1]
+            grads[p0] = protocols.secure_gradient_cp(
+                backend, p0=p0, p1=p1, feats=feats[p0].slice(idx),
+                d_self=dS, d_other_ct=ctO, d_other_share=dO,
+                mask_bound_bits=mask_bound, rng=rng)
+            meter.cipher(p0, p1, "P3.masked_grad", m, backend.key_bits(p1))
+            meter.ring(p1, p0, "P3.unmasked_share", m)
+        for p in parties:
+            if p.name in cps:
+                continue
+            m = p.X.shape[1]
+            meter.cipher(cps[0], p.name, "P3.enc_d_bcast", nb,
+                         backend.key_bits(cps[0]))
+            meter.cipher(cps[1], p.name, "P3.enc_d_bcast", nb,
+                         backend.key_bits(cps[1]))
+            grads[p.name] = protocols.secure_gradient_noncp(
+                backend, party=p.name, cps=cps,
+                feats=feats[p.name].slice(idx),
+                d_cts={cps[0]: ct0, cps[1]: ct1},
+                d_shares={cps[0]: d0, cps[1]: d1},
+                mask_bound_bits=mask_bound, rng=rng)
+            for cp in cps:
+                meter.cipher(p.name, cp, "P3.masked_grad", m,
+                             backend.key_bits(cp))
+                meter.ring(cp, p.name, "P3.unmasked_share", m)
+
+        for p in parties:
+            g = fixed_point.decode(grads[p.name], cfg.fx + cfg.f) / nb
+            W[p.name] = W[p.name] - cfg.lr * g
+
+        l0, l1 = model.loss_shares(ctx)
+        meter.ring(cps[1], cps[0], "P4.loss_share", 1)
+        if cps[0] != "C":
+            meter.ring(cps[0], "C", "P4.loss_share", 1)
+        revealed = float(fixed_point.decode(sharing.reconstruct(l0, l1),
+                                            cfg.f))
+        losses.append(model.finalize_loss(revealed, y[idx], nb))
+
+        if len(losses) > 1 and abs(losses[-1] - losses[-2]) < cfg.tol:
+            flag = True
+        for p in names[1:]:
+            meter.add("C", p, "flag", 1)
+        it += 1
+
+    return trainer.TrainResult(weights=W, losses=losses, meter=meter,
+                               runtime_s=0.0, n_iter=it)
+
+
+# ---------------------------------------------------------------------------
+# Parity assertions
+# ---------------------------------------------------------------------------
+
+def _make_parties(X, k):
+    parts = vertical.split_columns(X, k)
+    names = ["C"] + [f"B{i}" for i in range(1, k)]
+    return [PartyData(name=nm, X=p) for nm, p in zip(names, parts)]
+
+
+def _assert_exact(res, ref):
+    assert res.losses == ref.losses
+    assert set(res.weights) == set(ref.weights)
+    for name in ref.weights:
+        np.testing.assert_array_equal(res.weights[name], ref.weights[name])
+    assert dict(res.meter.by_tag) == dict(ref.meter.by_tag)
+    assert res.meter.total_bytes == ref.meter.total_bytes
+    assert res.n_iter == ref.n_iter
+
+
+@pytest.mark.parametrize("glm", ["logistic", "poisson"])
+@pytest.mark.parametrize("cp_selection", ["fixed", "random"])
+@pytest.mark.parametrize("k", [2, 4])
+def test_runtime_matches_seed_trainer(glm, cp_selection, k):
+    if glm == "poisson":
+        X, y = synthetic.dvisits(n=400, seed=7)
+    else:
+        X, y = synthetic.credit_default(n=400, d=12, seed=3)
+    cfg = VFLConfig(glm=glm, lr=0.1, max_iter=4, batch_size=128,
+                    he_backend="mock", tol=0.0, seed=11,
+                    cp_selection=cp_selection)
+    parties = _make_parties(X, k)
+    ref = _seed_train_vfl(parties, y, cfg)
+    res = trainer.train_vfl(parties, y, cfg)
+    _assert_exact(res, ref)
+    assert res.rounds > 0
+
+
+def test_runtime_matches_seed_trainer_paillier():
+    """Both HE backends: real Paillier (small but secure-shaped keys)."""
+    X, y = synthetic.credit_default(n=150, d=6, seed=5)
+    cfg = VFLConfig(glm="logistic", lr=0.2, max_iter=2, batch_size=64,
+                    he_backend="paillier", key_bits=256, tol=0.0, seed=1,
+                    cp_selection="fixed")
+    parties = _make_parties(X, 3)
+    ref = _seed_train_vfl(parties, y, cfg)
+    res = trainer.train_vfl(parties, y, cfg)
+    _assert_exact(res, ref)
+
+
+def test_early_stop_flag_parity():
+    X, y = synthetic.credit_default(n=300, seed=15)
+    cfg = VFLConfig(glm="logistic", lr=0.0, max_iter=10, batch_size=128,
+                    he_backend="mock", tol=1e-3, seed=5)
+    parties = _make_parties(X, 2)
+    ref = _seed_train_vfl(parties, y, cfg)
+    res = trainer.train_vfl(parties, y, cfg)
+    _assert_exact(res, ref)
+    assert res.n_iter == 2
+
+
+def test_pipelined_transport_equivalent_and_fewer_rounds():
+    """PipelinedTransport overlaps the data-independent Protocol-3 legs:
+    identical model + identical per-tag bytes, strictly fewer rounds."""
+    X, y = synthetic.credit_default(n=400, d=12, seed=9)
+    cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=3, batch_size=128,
+                    he_backend="mock", tol=0.0, seed=4)
+    parties = _make_parties(X, 4)
+    local = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    piped = trainer.train_vfl(parties, y, cfg,
+                              transport=PipelinedTransport())
+    assert piped.losses == local.losses
+    for name in local.weights:
+        np.testing.assert_array_equal(piped.weights[name],
+                                      local.weights[name])
+    assert dict(piped.meter.by_tag) == dict(local.meter.by_tag)
+    assert piped.rounds < local.rounds
+
+
+def test_pipelined_random_cp_deterministic():
+    """Thread interleaving must not shift the CP-selection trajectory."""
+    X, y = synthetic.credit_default(n=300, d=8, seed=2)
+    cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=3, batch_size=128,
+                    he_backend="mock", tol=0.0, seed=6,
+                    cp_selection="random")
+    parties = _make_parties(X, 3)
+    a = trainer.train_vfl(parties, y, cfg, transport=PipelinedTransport())
+    b = trainer.train_vfl(parties, y, cfg, transport=PipelinedTransport())
+    assert a.losses == b.losses
+    for name in a.weights:
+        np.testing.assert_array_equal(a.weights[name], b.weights[name])
+
+
+def test_runtime_predict_share_matches_trainresult():
+    """The actor inference path (Party.predict_share) reproduces
+    TrainResult.predict_wx."""
+    X, y = synthetic.credit_default(n=300, d=8, seed=8)
+    cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=3, batch_size=128,
+                    he_backend="mock", tol=0.0, seed=3)
+    parties = _make_parties(X, 3)
+    sched = VFLScheduler(parties, y, cfg)
+    res = sched.run()
+    wx_actor = sum(p.predict_share() for p in sched.parties)
+    np.testing.assert_allclose(wx_actor, res.predict_wx(parties))
