@@ -1,5 +1,13 @@
 """Crypto kernel microbenchmarks (CPU wall-clock; the Pallas path runs in
-interpret mode here — on TPU it is the deployment path)."""
+interpret mode here — on TPU it is the deployment path).
+
+Rows are dicts {name, us, derived, montmuls?, backend} so `run.py` can
+emit both the CSV lines and the machine-readable ``BENCH_crypto.json``
+perf-trajectory file.  The library-vs-engine pairs (`montmul`,
+`mont_exp`, `he_matvec`) are the acceptance gauge for the fused kernels:
+`mont_exp_fused` must beat the per-step `ops.mont_exp_bits` ladder
+(2×nbits separate pallas_calls) by ≥2× at batch ≥128.
+"""
 from __future__ import annotations
 
 import time
@@ -9,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.crypto import bigint, paillier, ring
+from repro.crypto import engine as engine_mod
 from repro.crypto.bigint import Modulus
 from repro.kernels import ops
 
@@ -25,60 +34,126 @@ def _time(fn, *args, warmup: int = 1, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps * 1e6    # µs
 
 
-def run() -> list[tuple[str, float, str]]:
+def _row(name: str, us: float, derived: str = "", *,
+         backend: str = "jnp", montmuls: int | None = None) -> dict:
+    r = {"name": name, "us": us, "derived": derived, "backend": backend}
+    if montmuls is not None:
+        r["montmuls"] = montmuls
+    return r
+
+
+def run(smoke: bool = False) -> list[dict]:
+    """smoke=True shrinks every size so CI can run this as a drift check
+    in seconds; full mode is the perf-trajectory measurement."""
     rows = []
+    mod_bits = (256,) if smoke else (256, 1024)
+    batch = 64 if smoke else 256
     # --- Montgomery product: library vs Pallas(interpret) ----------------
-    for bits in (256, 1024):
+    for bits in mod_bits:
         n = (1 << bits) - 159
         mod = Modulus.make(n)
-        batch = 256
         vals = RNG.integers(0, 1 << 62, size=batch).astype(object)
         A = jnp.asarray(bigint.ints_to_limbs([int(v) % n for v in vals],
                                              mod.L))
         jit_lib = jax.jit(lambda a, b: bigint.mont_mul(a, b, mod))
         us = _time(jit_lib, A, A)
-        rows.append((f"montmul_lib_{bits}b_x{batch}", us,
-                     f"{batch/us:.2f}mul_per_us"))
+        rows.append(_row(f"montmul_lib_{bits}b_x{batch}", us,
+                         f"{batch/us:.2f}mul_per_us", montmuls=batch))
         us = _time(lambda a, b: ops.montmul(a, b, mod, interpret=True), A, A)
-        rows.append((f"montmul_pallas_interp_{bits}b_x{batch}", us,
-                     f"{batch/us:.2f}mul_per_us"))
+        rows.append(_row(f"montmul_pallas_interp_{bits}b_x{batch}", us,
+                         f"{batch/us:.2f}mul_per_us",
+                         backend="pallas-interpret", montmuls=batch))
+
+    # --- mont_exp: per-step kernel ladder vs fused single pallas_call ----
+    # (the tentpole acceptance row: fused ≥2× at batch ≥128)
+    exp_mod = Modulus.make((1 << 256) - 159)
+    exp_batch = 128
+    exp_bits_n = 8 if smoke else 16
+    base_ints = [int.from_bytes(RNG.bytes(30), "little") % exp_mod.value
+                 for _ in range(exp_batch)]
+    Bm = bigint.to_mont(
+        jnp.asarray(bigint.ints_to_limbs(base_ints, exp_mod.L)), exp_mod)
+    ebits = jnp.asarray(np.stack(
+        [bigint.int_to_bits(int(e), exp_bits_n)
+         for e in RNG.integers(0, 1 << exp_bits_n, size=exp_batch)]))
+    exp_mm = 2 * exp_bits_n * exp_batch
+    us_lib = _time(jax.jit(lambda b, e: bigint.mont_exp_bits(b, e, exp_mod)),
+                   Bm, ebits)
+    rows.append(_row(f"mont_exp_lib_256b_x{exp_batch}_e{exp_bits_n}", us_lib,
+                     "", montmuls=exp_mm))
+    us_step = _time(lambda b, e: ops.mont_exp_bits(b, e, exp_mod,
+                                                   interpret=True), Bm, ebits)
+    rows.append(_row(f"mont_exp_perstep_256b_x{exp_batch}_e{exp_bits_n}",
+                     us_step, f"pallas_calls={2*exp_bits_n}",
+                     backend="pallas-interpret", montmuls=exp_mm))
+    us_fused = _time(lambda b, e: ops.mont_exp_fused(b, e, exp_mod,
+                                                     interpret=True),
+                     Bm, ebits)
+    rows.append(_row(f"mont_exp_fused_256b_x{exp_batch}_e{exp_bits_n}",
+                     us_fused,
+                     f"pallas_calls=1;speedup_vs_perstep={us_step/us_fused:.2f}x",
+                     backend="pallas-interpret", montmuls=exp_mm))
 
     # --- Paillier primitive ops ------------------------------------------
-    key = paillier.keygen(256, seed=1)
+    key = paillier.keygen(128 if smoke else 256, seed=1)
     pub = key.pub
-    m = paillier.encode_ints(pub, [123456] * 64)
+    kb = pub.key_bits
+    enc_batch = 16 if smoke else 64
+    m = paillier.encode_ints(pub, [123456] * enc_batch)
     rng = np.random.default_rng(2)
-    noise = paillier.noise_to_mont(pub, paillier.raw_noise(pub, 64, rng))
+    noise = paillier.noise_to_mont(pub, paillier.raw_noise(pub, enc_batch,
+                                                           rng))
     us = _time(jax.jit(lambda mm: paillier.encrypt_with_noise(
         pub, mm, noise)), m)
-    rows.append(("paillier_enc_precomp_noise_x64_256b", us, ""))
+    rows.append(_row(f"paillier_enc_precomp_noise_x{enc_batch}_{kb}b", us))
     c = paillier.encrypt_with_noise(pub, m, noise)
     us = _time(jax.jit(lambda cc: paillier.decrypt(key, cc)), c)
-    rows.append(("paillier_dec_x64_256b", us, ""))
+    rows.append(_row(f"paillier_dec_x{enc_batch}_{kb}b", us))
     us_crt = _time(jax.jit(lambda cc: paillier.decrypt_crt(key, cc)), c)
-    rows.append(("paillier_dec_crt_x64_256b", us_crt,
-                 f"speedup={us/us_crt:.2f}x"))
+    rows.append(_row(f"paillier_dec_crt_x{enc_batch}_{kb}b", us_crt,
+                     f"speedup={us/us_crt:.2f}x"))
     us = _time(jax.jit(lambda cc: paillier.add_ct(pub, cc, cc)), c)
-    rows.append(("paillier_hom_add_x64_256b", us, ""))
+    rows.append(_row(f"paillier_hom_add_x{enc_batch}_{kb}b", us,
+                     montmuls=enc_batch))
 
-    # --- HE matvec (Protocol 3 hot path): bit-serial vs windowed ---------
+    # --- HE matvec (Protocol 3 hot path): library vs fused engine --------
     from repro.core import protocols
-    exps = jnp.asarray(RNG.integers(0, 1 << 22, size=(64, 8),
+    mv_m = 4 if smoke else 8
+    width = 22
+    window = protocols.DEFAULT_WINDOW
+    exps = jnp.asarray(RNG.integers(0, 1 << width,
+                                    size=(enc_batch, mv_m),
                                     dtype=np.uint32))
-    us_b = _time(lambda cc, ee: protocols.he_matvec(pub, cc, ee, 22,
-                                                    window=1), c, exps)
-    rows.append(("he_matvec_bitserial_64x8_w22_256b", us_b,
-                 f"{64*8/us_b:.3f}cells_per_us"))
-    us_w = _time(lambda cc, ee: protocols.he_matvec(pub, cc, ee, 22,
-                                                    window=4), c, exps)
-    rows.append(("he_matvec_window4_64x8_w22_256b", us_w,
-                 f"{64*8/us_w:.3f}cells_per_us;speedup={us_b/us_w:.2f}x"))
+    levels = -(-width // window)
+    mv_mm = (enc_batch * ((1 << window) - 2)
+             + levels * (enc_batch * mv_m + (window + 1) * mv_m))
+    if not smoke:
+        us_b = _time(lambda cc, ee: protocols.he_matvec(
+            pub, cc, ee, width, window=1), c, exps)
+        rows.append(_row(f"he_matvec_bitserial_{enc_batch}x{mv_m}_w{width}_{kb}b",
+                         us_b, f"{enc_batch*mv_m/us_b:.3f}cells_per_us",
+                         montmuls=width * (enc_batch * mv_m + 2 * mv_m)))
+    us_w = _time(lambda cc, ee: protocols.he_matvec(
+        pub, cc, ee, width, window=window), c, exps)
+    rows.append(_row(f"he_matvec_lib_window{window}_{enc_batch}x{mv_m}"
+                     f"_w{width}_{kb}b", us_w,
+                     f"{enc_batch*mv_m/us_w:.3f}cells_per_us",
+                     montmuls=mv_mm))
+    eng = engine_mod.CryptoEngine(backend="pallas-interpret")
+    us_e = _time(lambda cc, ee: protocols.he_matvec(
+        pub, cc, ee, width, window=window, engine=eng), c, exps)
+    rows.append(_row(f"he_matvec_fused_window{window}_{enc_batch}x{mv_m}"
+                     f"_w{width}_{kb}b", us_e,
+                     f"pallas_calls=1;lib_vs_fused={us_w/us_e:.2f}x",
+                     backend="pallas-interpret", montmuls=mv_mm))
 
     # --- ring64 matmul: jnp reference vs Pallas(interpret) ---------------
-    M, K, N = 128, 256, 64
+    M, K, N = (32, 64, 16) if smoke else (128, 256, 64)
     a = ring.from_numpy_u64(RNG.integers(0, 1 << 64, (M, K), dtype=np.uint64))
     b = ring.from_numpy_u64(RNG.integers(0, 1 << 64, (K, N), dtype=np.uint64))
-    us = _time(lambda x, y: ops.ring_matmul(x, y, tm=64, tn=64), a, b)
-    rows.append((f"ring64_matmul_pallas_{M}x{K}x{N}", us,
-                 f"{2*M*K*N/us/1e6:.2f}Gmac_per_s"))
+    us = _time(lambda x, y: ops.ring_matmul(x, y, tm=min(M, 64),
+                                            tn=min(N, 64)), a, b)
+    rows.append(_row(f"ring64_matmul_pallas_{M}x{K}x{N}", us,
+                     f"{2*M*K*N/us/1e6:.2f}Gmac_per_s",
+                     backend="pallas-interpret"))
     return rows

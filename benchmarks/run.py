@@ -1,13 +1,24 @@
 """Benchmark harness — one entry per paper table/figure plus kernel and
 roofline reports.  Prints ``name,us_per_call,derived`` CSV lines.
 
+The kernels bench additionally writes ``BENCH_crypto.json`` at the repo
+root (per-kernel µs, analytic Montgomery-product counts, backend, jax
+metadata) — the machine-readable perf trajectory; commit it so speedups
+and regressions accumulate in history.
+
   PYTHONPATH=src python -m benchmarks.run [--paper] [--only table1_lr]
+      [--smoke]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_CRYPTO_PATH = REPO_ROOT / "BENCH_crypto.json"
 
 
 def _csv(name: str, us: float, derived: str = "") -> None:
@@ -63,10 +74,30 @@ def bench_fig2(_: bool) -> None:
                  f"max_residual_mb={r['max_residual_mb']}")
 
 
-def bench_kernels(_: bool) -> None:
+def bench_kernels(_: bool, smoke: bool = False) -> None:
+    import jax
+
     from benchmarks import kernel_bench
-    for name, us, derived in kernel_bench.run():
-        _csv(f"kernel.{name}", us, derived)
+    from repro.crypto import engine as engine_mod
+    rows = kernel_bench.run(smoke=smoke)
+    for r in rows:
+        _csv(f"kernel.{r['name']}", r["us"], r["derived"])
+    if smoke:
+        # drift check only — never clobber the committed full-measurement
+        # perf trajectory with tiny smoke numbers
+        print(f"# smoke mode: {BENCH_CRYPTO_PATH.name} not written")
+        return
+    report = {
+        "schema": "bench_crypto/v1",
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "default_crypto_engine": engine_mod.resolve_backend(),
+        "kernels": [
+            {k: v for k, v in r.items()} for r in rows
+        ],
+    }
+    BENCH_CRYPTO_PATH.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"# wrote {BENCH_CRYPTO_PATH}")
 
 
 def bench_roofline(_: bool) -> None:
@@ -101,6 +132,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true",
                     help="full paper-scale configurations (slow on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI kernel-drift check; kernels only)")
     ap.add_argument("--only", default=None, choices=list(BENCHES))
     args = ap.parse_args()
     print("name,us_per_call,derived")
@@ -108,7 +141,10 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         try:
-            fn(args.paper)
+            if name == "kernels":
+                fn(args.paper, smoke=args.smoke)
+            else:
+                fn(args.paper)
         except Exception as e:   # noqa: BLE001 — report and continue
             _csv(f"{name}.ERROR", 0.0, f"{type(e).__name__}:{e}")
             import traceback

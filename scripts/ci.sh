@@ -11,4 +11,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # import at seed; this guards the fix).
 python -m pytest -q --collect-only >/dev/null
 
+# Crypto-kernel drift smoke (CPU, tiny sizes): the kernel microbench
+# must run end-to-end.  Engine bit-exactness parity itself lives in
+# tests/test_engine.py, collected by the tier-1 sweep below.
+python -m benchmarks.run --only kernels --smoke >/dev/null
+
 exec python -m pytest -x -q "$@"

@@ -23,8 +23,10 @@ Engineering notes (DESIGN.md §7):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import threading
 from typing import Callable
 
 import jax
@@ -32,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.crypto import bigint, fixed_point, paillier, prng, ring
+from repro.crypto import engine as engine_mod
 from repro.crypto.bigint import mont_mul, mont_one
 from repro.crypto.ring import R64
 
@@ -60,6 +63,18 @@ DEFAULT_WINDOW = 4      # fixed-window exponentiation (§Perf: 3.7× fewer
                         # Montgomery products than bit-serial at w=22)
 
 
+def window_digits(exps, width: int, window: int):
+    """MSB-first fixed-window digit decomposition: (…, levels) values in
+    [0, 2^window).  Works on numpy (EncodedFeatures precompute) and jnp
+    (traced fallback) arrays alike."""
+    levels = -(-width // window)
+    mask = (1 << window) - 1
+    cols = [(exps >> ((levels - 1 - lvl) * window)) & mask
+            for lvl in range(levels)]
+    stack = np.stack if isinstance(exps, np.ndarray) else jnp.stack
+    return stack(cols, axis=-1)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 3))
 def _he_matvec_bitserial(pub_static, cts, exps, width):
     pub = pub_static.pub
@@ -80,25 +95,18 @@ def _he_matvec_bitserial(pub_static, cts, exps, width):
     return acc
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4))
-def _he_matvec_windowed(pub_static, cts, exps, width, window):
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _he_matvec_windowed(pub_static, cts, digits, window):
     """Fixed-window ladder: precompute c_i^j for j<2^window once per row,
     then one gather + tree-⊕ per digit level.  Montgomery-product count:
       n·(2^w − 2)  precompute  +  levels·(n·m tree + w·m squarings)
-    vs bit-serial  width·(n·m + 2m) — ≈ window× fewer in the n·m term."""
+    vs bit-serial  width·(n·m + 2m) — ≈ window× fewer in the n·m term.
+    `digits`: (n, m, levels) MSB-first window digits (precomputed once
+    per batch by EncodedFeatures.make)."""
     pub = pub_static.pub
     mod = pub.mod_n2
     n, L2 = cts.shape
-    m = exps.shape[1]
-    levels = -(-width // window)
-    pad_width = levels * window
-    # digit decomposition, MSB-first: (n, m, levels) values in [0, 2^w)
-    digits = []
-    for lvl in range(levels):
-        shift = (levels - 1 - lvl) * window
-        digits.append((exps >> shift) & ((1 << window) - 1))
-    digits = jnp.stack(digits, axis=-1)
-    del pad_width
+    m = digits.shape[1]
     # power table: (2^w, n, L2)
     table = [jnp.broadcast_to(mont_one(mod), cts.shape), cts]
     for _ in range(2, 1 << window):
@@ -135,15 +143,33 @@ class _HashablePub:
 
 def he_matvec(pub: paillier.PublicKey, cts: jnp.ndarray,
               exps: jnp.ndarray, width: int,
-              window: int = DEFAULT_WINDOW) -> jnp.ndarray:
+              window: int = DEFAULT_WINDOW, *,
+              digits=None, engine=None) -> jnp.ndarray:
     """cts: (n, L2) Montgomery ciphertexts; exps: (n, m) uint32 < 2^width.
     Returns (m, L2) ciphertexts of Σ_i exps[i,j]·m_i (integer, no wrap).
-    window=1 → bit-serial ladder; window=4 (default) → fixed-window."""
+    window=1 → bit-serial ladder; window=4 (default) → fixed-window.
+    `digits` may carry the precomputed MSB-first window decomposition
+    (EncodedFeatures.digits, derived at DEFAULT_WINDOW); it is used only
+    for window=DEFAULT_WINDOW with a matching level count, else
+    re-derived.  `engine` (default: the
+    process engine) routes the ladder to the fused Pallas kernel or the
+    jnp library — bit-identical either way."""
+    eng = engine if engine is not None else engine_mod.get_engine()
     if window <= 1:
+        if eng.uses_kernels:
+            bits = fixed_point.int_bits_msb(exps.astype(_U32), width)
+            return eng.he_matvec_windowed(cts, bits, pub.mod_n2, 1)
         return _he_matvec_bitserial(_HashablePub(pub), cts,
                                     exps.astype(_U32), width)
-    return _he_matvec_windowed(_HashablePub(pub), cts, exps.astype(_U32),
-                               width, window)
+    # precomputed digits are the DEFAULT_WINDOW decomposition — a level-
+    # count match alone can coincide across windows, so key on the window
+    if digits is None or window != DEFAULT_WINDOW \
+            or digits.shape[-1] != -(-width // window):
+        digits = window_digits(exps.astype(_U32), width, window)
+    if eng.uses_kernels:
+        return eng.he_matvec_windowed(cts, digits, pub.mod_n2, window)
+    return _he_matvec_windowed(_HashablePub(pub), cts,
+                               jnp.asarray(digits, _U32), window)
 
 
 # ---------------------------------------------------------------------------
@@ -151,35 +177,102 @@ def he_matvec(pub: paillier.PublicKey, cts: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 class PaillierBackend:
-    """Real Paillier (128…2048-bit keys).  Each party owns a keypair."""
+    """Real Paillier (128…2048-bit keys).  Each party owns a keypair.
+
+    All hot loops dispatch through `engine` (None → the process default
+    CryptoEngine, i.e. fused Pallas kernels on TPU, jnp library on CPU).
+
+    Noise pool: the encryption-noise modexps r^n mod n² are data-
+    independent, so once `attach_noise_executor` hands the backend a
+    thread pool (the runtime scheduler wires the PipelinedTransport's
+    pool), `prefetch_noise` draws r synchronously (keeping the entropy
+    stream deterministic) and runs the expensive modexp off-thread,
+    overlapped with the Protocol-3 legs.  Consumers match pooled batches
+    by (party, count); a miss falls back to the synchronous path, so the
+    pool is purely a scheduling optimization — masks cancel exactly and
+    noise never reaches a decrypted value, hence the trained model is
+    bit-identical with or without it (tests/test_engine.py)."""
 
     name = "paillier"
 
     def __init__(self, keys: dict[str, paillier.PrivateKey],
-                 rng: np.random.Generator):
+                 rng: np.random.Generator, engine=None):
         self.keys = keys
         self.rng = rng
+        self.engine = engine
+        self._noise: dict[str, collections.deque] = collections.defaultdict(
+            collections.deque)
+        self._noise_lock = threading.Lock()
+        self._noise_exec = None
 
     def key_bits(self, party: str) -> int:
         return self.keys[party].pub.key_bits
 
+    # -- noise pool ---------------------------------------------------------
+    def attach_noise_executor(self, executor) -> None:
+        self._noise_exec = executor
+
+    def prefetch_noise(self, party: str, count: int) -> None:
+        """Schedule `count` fresh r^n noises under `party`'s key."""
+        if self._noise_exec is None or count <= 0:
+            return
+        pub = self.keys[party].pub
+        raw = paillier.raw_noise(pub, count, self.rng)
+        fut = self._noise_exec.submit(paillier.noise_to_mont, pub, raw,
+                                      self.engine)
+        with self._noise_lock:
+            self._noise[party].append((count, fut))
+
+    def _pooled_noise(self, party: str, count: int):
+        """Pop a prefetched r^n batch of exactly `count` rows, or None."""
+        with self._noise_lock:
+            q = self._noise[party]
+            for i, (c, fut) in enumerate(q):
+                if c == count:
+                    del q[i]
+                    break
+            else:
+                return None
+        return fut.result()
+
+    def discard_pooled_noise(self) -> None:
+        """Drop any unconsumed prefetched batches (the scheduler calls
+        this at iteration end so a prefetch/consumption count drift can
+        never grow the pool unboundedly — it just wastes one batch and
+        the next consumer falls back to the synchronous path)."""
+        with self._noise_lock:
+            self._noise.clear()
+
+    def _encrypt(self, pub, m_limbs, party: str, count: int) -> jnp.ndarray:
+        rn = self._pooled_noise(party, count)
+        if rn is not None:
+            return paillier.encrypt_with_noise(pub, m_limbs, rn,
+                                               self.engine)
+        return paillier.encrypt(pub, m_limbs, rng=self.rng,
+                                engine=self.engine)
+
+    # -- protocol ops -------------------------------------------------------
     def encrypt_share(self, party: str, d: R64) -> jnp.ndarray:
         pub = self.keys[party].pub
         m = fixed_point.r64_to_limbs(d, pub.Ln)
-        return paillier.encrypt(pub, m, rng=self.rng)
+        count = int(np.prod(m.shape[:-1])) if m.ndim > 1 else 1
+        return self._encrypt(pub, m, party, count)
 
-    def matvec(self, party: str, cts, exps, width) -> jnp.ndarray:
-        return he_matvec(self.keys[party].pub, cts, exps, width)
+    def matvec(self, party: str, cts, exps, width, digits=None
+               ) -> jnp.ndarray:
+        return he_matvec(self.keys[party].pub, cts, exps, width,
+                         digits=digits, engine=self.engine)
 
     def add_mask(self, party: str, cts, mask_ints: list[int]) -> jnp.ndarray:
         """cts ⊕ Enc(R) with fresh noise — masks AND re-randomizes."""
         pub = self.keys[party].pub
         m = bigint.ints_to_limbs(mask_ints, pub.Ln)
-        cr = paillier.encrypt(pub, m, rng=self.rng)
-        return paillier.add_ct(pub, cts, cr)
+        cr = self._encrypt(pub, m, party, len(mask_ints))
+        return paillier.add_ct(pub, cts, cr, self.engine)
 
     def decrypt_to_r64(self, party: str, cts) -> R64:
-        dec = paillier.decrypt(self.keys[party], cts)
+        dec = paillier.decrypt_crt(self.keys[party], cts,
+                                   engine=self.engine)
         return fixed_point.limbs_to_r64(dec)
 
 
@@ -199,7 +292,7 @@ class MockHEBackend:
     def encrypt_share(self, party: str, d: R64) -> R64:
         return d
 
-    def matvec(self, party: str, cts: R64, exps, width) -> R64:
+    def matvec(self, party: str, cts: R64, exps, width, digits=None) -> R64:
         xs = exps.astype(_U32)
         xa = R64(jnp.zeros_like(xs), xs)                 # lift u32 exponents
         # (n, m) exps × (n,) cts -> (m,)
@@ -226,6 +319,10 @@ class EncodedFeatures:
     exps: np.ndarray         # (n, m_p) uint32 = x_int + OFF
     fx: int
     width: int
+    digits: np.ndarray | None = None  # (n, m_p, levels) MSB-first window
+                                      # digits at DEFAULT_WINDOW — derived
+                                      # once here, sliced per batch, so
+                                      # he_matvec never re-decomposes
 
     @staticmethod
     def make(x: np.ndarray, fx: int, width: int = DEFAULT_EXP_BITS):
@@ -234,14 +331,19 @@ class EncodedFeatures:
         if np.any(np.abs(xi) >= off):
             raise ValueError("feature fixed-point exceeds exponent width; "
                              "raise width or normalize features")
+        exps = (xi + off).astype(np.uint32)
         return EncodedFeatures(
             x_int=xi.astype(np.int32),
-            exps=(xi + off).astype(np.uint32),
-            fx=fx, width=width)
+            exps=exps,
+            fx=fx, width=width,
+            digits=window_digits(exps, width, DEFAULT_WINDOW)
+            .astype(np.uint32))
 
     def slice(self, idx) -> "EncodedFeatures":
-        return EncodedFeatures(x_int=self.x_int[idx], exps=self.exps[idx],
-                               fx=self.fx, width=self.width)
+        return EncodedFeatures(
+            x_int=self.x_int[idx], exps=self.exps[idx],
+            fx=self.fx, width=self.width,
+            digits=None if self.digits is None else self.digits[idx])
 
 
 def mask_ints(bound_bits: int, m: int, rng: np.random.Generator) -> list[int]:
@@ -278,7 +380,7 @@ def masked_matvec(backend, key_owner: str, d_ct, feats: EncodedFeatures,
     enc_masked as a `P3.masked_grad` message and keeps R for unmasking."""
     m = feats.exps.shape[1]
     enc_g = backend.matvec(key_owner, d_ct, jnp.asarray(feats.exps),
-                           feats.width)
+                           feats.width, digits=feats.digits)
     R = mask_ints(mask_bound_bits, m, rng)
     return backend.add_mask(key_owner, enc_g, R), mask_to_r64(R)
 

@@ -42,6 +42,8 @@ class VFLConfig:
     key_bits: int = 1024
     he_backend: str = "paillier"      # "paillier" | "mock"
     cp_selection: str = "fixed"       # "fixed" | "random"
+    crypto_engine: str = "auto"       # "auto" | "jnp" | "pallas-interpret"
+                                      # | "pallas" (see crypto.engine)
     seed: int = 0
     record_every: int = 1
 
@@ -69,9 +71,11 @@ def make_backend(cfg: VFLConfig, party_names: Sequence[str],
                  rng: np.random.Generator):
     if cfg.he_backend == "mock":
         return protocols.MockHEBackend(cfg.key_bits)
+    from repro.crypto import engine as engine_mod
     keys = {p: paillier.keygen(cfg.key_bits, seed=int(rng.integers(2**31)))
             for p in party_names}
-    return protocols.PaillierBackend(keys, rng)
+    return protocols.PaillierBackend(
+        keys, rng, engine=engine_mod.make(cfg.crypto_engine))
 
 
 def train_vfl(parties: list[PartyData], y: np.ndarray, cfg: VFLConfig,

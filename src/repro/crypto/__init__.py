@@ -4,6 +4,6 @@ ring-2^64 share arithmetic and fixed-point codecs.
 All device code uses radix-2^12 limbs in uint32 so every operation maps to
 native int32 TPU vector/MXU ops (no 64-bit multiplier required).
 """
-from repro.crypto import bigint, fixed_point, paillier, prng, ring
+from repro.crypto import bigint, engine, fixed_point, paillier, prng, ring
 
-__all__ = ["bigint", "paillier", "ring", "fixed_point", "prng"]
+__all__ = ["bigint", "engine", "paillier", "ring", "fixed_point", "prng"]

@@ -25,6 +25,7 @@ canonical form where required.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
@@ -269,11 +270,25 @@ def mont_one(mod: Modulus) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def int_to_bits(e: int, nbits: int) -> np.ndarray:
-    """MSB-first bit vector of a host integer."""
+    """MSB-first bit vector of a host integer (vectorized: one to_bytes
+    plus an unpackbits, no per-bit python loop)."""
+    e = int(e)
     if e >> nbits:
         raise ValueError("exponent wider than nbits")
-    return np.array([(e >> (nbits - 1 - i)) & 1 for i in range(nbits)],
-                    dtype=np.uint32)
+    if nbits == 0:
+        return np.zeros(0, dtype=np.uint32)
+    by = np.frombuffer(e.to_bytes((nbits + 7) // 8, "big"), np.uint8)
+    return np.unpackbits(by)[-nbits:].astype(np.uint32)
+
+
+@functools.lru_cache(maxsize=4096)
+def cached_bits(e: int, nbits: int) -> np.ndarray:
+    """Memoized MSB-first bit decomposition keyed on (exponent, width) —
+    host-known exponents (n, λ, smul_const multipliers) repeat every
+    iteration, so the decomposition is paid once per key/constant."""
+    out = int_to_bits(e, nbits)
+    out.setflags(write=False)
+    return out
 
 
 def limbs_to_bits(x: jnp.ndarray, nbits: int) -> jnp.ndarray:
@@ -312,7 +327,7 @@ def mont_exp_const(base_mont: jnp.ndarray, e: int, mod: Modulus) -> jnp.ndarray:
     """base^e for a host-known exponent (key material: n, lambda)."""
     if e == 0:
         return jnp.broadcast_to(mont_one(mod), base_mont.shape)
-    bits = jnp.asarray(int_to_bits(e, e.bit_length()))
+    bits = jnp.asarray(cached_bits(e, e.bit_length()))
     return mont_exp_bits(base_mont, bits, mod)
 
 

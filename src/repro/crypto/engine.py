@@ -1,0 +1,147 @@
+"""Crypto compute engine: one dispatch point for every Paillier hot loop.
+
+Every modular-arithmetic hot spot — encryption noise r^n, the Protocol-3
+HE matvec, CRT decryption, scalar ⊗, homomorphic ⊕ — funnels through a
+`CryptoEngine`, which routes each op to either the pure-jnp library
+(`crypto.bigint`) or the fused Pallas kernels (`kernels.montexp` /
+`kernels.montmul`).  Backends:
+
+* ``jnp``              — `lax`-loop library code (CPU default; also the
+                         bit-exactness oracle).
+* ``pallas-interpret`` — fused kernels in interpret mode (CPU: same IR
+                         as the TPU path, runs as jitted jax — used by
+                         the parity suite and CI).
+* ``pallas``           — fused kernels compiled for TPU (deployment).
+
+All three produce bit-identical canonical limbs (tests/test_engine.py),
+so the switch is purely a performance knob: select with the
+``REPRO_CRYPTO_ENGINE`` env var, `VFLConfig.crypto_engine`, or
+`set_engine`/`use_engine`.  ``auto`` resolves to ``pallas`` on TPU and
+``jnp`` elsewhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto import bigint
+from repro.crypto.bigint import Modulus
+
+_U32 = jnp.uint32
+
+BACKENDS = ("jnp", "pallas-interpret", "pallas")
+ENV_VAR = "REPRO_CRYPTO_ENGINE"
+
+
+def resolve_backend(name: str | None = None) -> str:
+    """``auto``/None -> env var -> hardware default."""
+    if name in (None, "", "auto"):
+        name = os.environ.get(ENV_VAR, "auto")
+    if name in ("", "auto"):
+        name = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown crypto engine {name!r}; "
+                         f"choose from {BACKENDS + ('auto',)}")
+    return name
+
+
+@dataclasses.dataclass(frozen=True)
+class CryptoEngine:
+    """Immutable dispatch descriptor (hashable, so it can ride through
+    jit static args)."""
+
+    backend: str = "jnp"
+    tile_b: int = 128           # montmul / ladder batch tile
+    tile_m: int = 128           # he_matvec output-column tile
+    chunk_n: int = 512          # he_matvec ciphertext-row chunk (VMEM)
+
+    @property
+    def uses_kernels(self) -> bool:
+        return self.backend != "jnp"
+
+    @property
+    def interpret(self) -> bool:
+        return self.backend != "pallas"
+
+    # -- fused hot-path ops -------------------------------------------------
+    def mont_mul(self, a: jnp.ndarray, b: jnp.ndarray,
+                 mod: Modulus) -> jnp.ndarray:
+        if not self.uses_kernels:
+            return bigint.mont_mul(a, b, mod)
+        from repro.kernels import ops
+        return ops.montmul(a, b, mod, tile_b=self.tile_b,
+                           interpret=self.interpret)
+
+    def mont_exp_bits(self, base: jnp.ndarray, bits: jnp.ndarray,
+                      mod: Modulus) -> jnp.ndarray:
+        """Constant-time ladder; kernel path runs it in ONE pallas_call."""
+        if not self.uses_kernels:
+            return bigint.mont_exp_bits(base, bits, mod)
+        from repro.kernels import ops
+        return ops.mont_exp_fused(base, bits, mod, tile_b=self.tile_b,
+                                  interpret=self.interpret)
+
+    def mont_exp_const(self, base: jnp.ndarray, e: int,
+                       mod: Modulus) -> jnp.ndarray:
+        if e == 0:
+            return jnp.broadcast_to(bigint.mont_one(mod), base.shape)
+        bits = jnp.asarray(bigint.cached_bits(int(e), int(e).bit_length()))
+        return self.mont_exp_bits(base, bits, mod)
+
+    def he_matvec_windowed(self, cts: jnp.ndarray, digits,
+                           mod: Modulus, window: int) -> jnp.ndarray:
+        """Fused windowed matvec (kernel backends only; protocols routes
+        the jnp backend to its library ladders).  digits: (n, m, levels)
+        MSB-first window digits."""
+        from repro.kernels import ops
+        return ops.he_matvec_fused(cts, jnp.asarray(digits, _U32), mod,
+                                   window=window, tile_m=self.tile_m,
+                                   chunk_n=self.chunk_n,
+                                   interpret=self.interpret)
+
+    # -- derived conveniences (same dispatch, used by paillier.py) ----------
+    def to_mont(self, a: jnp.ndarray, mod: Modulus) -> jnp.ndarray:
+        return self.mont_mul(a, jnp.asarray(mod.r2, _U32), mod)
+
+    def from_mont(self, a: jnp.ndarray, mod: Modulus) -> jnp.ndarray:
+        one = jnp.zeros(mod.L, _U32).at[0].set(1)
+        return self.mont_mul(a, one, mod)
+
+
+def make(name: str | None = None, **kw) -> CryptoEngine:
+    return CryptoEngine(backend=resolve_backend(name), **kw)
+
+
+_DEFAULT: CryptoEngine | None = None
+
+
+def get_engine() -> CryptoEngine:
+    """Process-default engine (env-resolved on first use)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = make()
+    return _DEFAULT
+
+
+def set_engine(engine: CryptoEngine | str | None) -> CryptoEngine:
+    """Install the process-default engine; accepts a backend name."""
+    global _DEFAULT
+    _DEFAULT = make(engine) if isinstance(engine, (str, type(None))) \
+        else engine
+    return _DEFAULT
+
+
+@contextlib.contextmanager
+def use_engine(engine: CryptoEngine | str):
+    """Temporarily switch the process-default engine (tests/benchmarks)."""
+    global _DEFAULT
+    prev = _DEFAULT
+    set_engine(engine)
+    try:
+        yield get_engine()
+    finally:
+        _DEFAULT = prev

@@ -11,6 +11,10 @@
   reducing decrypted integers mod 2^64, so multipliers may be lifted to
   their non-negative residues mod 2^64 and no ciphertext inversion is
   ever required.
+* Every hot loop (noise modexp, ladder, ⊕-reduce) dispatches through a
+  `crypto.engine.CryptoEngine` — pass `engine=` or rely on the process
+  default (`crypto.engine.get_engine()`), which selects the fused Pallas
+  kernels on TPU and the jnp library on CPU.  All backends are bit-exact.
 """
 from __future__ import annotations
 
@@ -21,12 +25,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.crypto import bigint
+from repro.crypto import engine as engine_mod
 from repro.crypto.bigint import (LIMB_BITS, Modulus, add_small, big_mul_full,
                                  from_mont, int_to_bits, int_to_limbs,
                                  limbs_to_int, mont_exp_bits, mont_exp_const,
                                  mont_mul, mul_low, nlimbs, sub_small, to_mont)
 
 _U32 = jnp.uint32
+
+
+def _eng(engine: "engine_mod.CryptoEngine | None") -> "engine_mod.CryptoEngine":
+    return engine if engine is not None else engine_mod.get_engine()
 
 
 # ---------------------------------------------------------------------------
@@ -187,8 +196,16 @@ def encode_ints(pub: PublicKey, xs) -> np.ndarray:
 
 
 def decode_ints(limbs) -> list[int]:
-    out = limbs_to_int(np.asarray(limbs))
-    return out if isinstance(out, list) else [out]
+    """(batch…, L) limb array -> python ints.  Vectorized: one object-dtype
+    dot against the radix powers instead of a per-limb python loop per
+    element."""
+    arr = np.asarray(limbs)
+    weights = np.array([1 << (LIMB_BITS * i) for i in range(arr.shape[-1])],
+                       dtype=object)
+    vals = np.dot(arr.astype(object), weights)
+    if arr.ndim == 1:
+        return [int(vals)]
+    return vals.tolist()
 
 
 # ---------------------------------------------------------------------------
@@ -204,73 +221,83 @@ def raw_noise(pub: PublicKey, batch: int,
     return np.concatenate([r, pad], axis=-1)
 
 
-def noise_to_mont(pub: PublicKey, r_limbs) -> jnp.ndarray:
+def noise_to_mont(pub: PublicKey, r_limbs, engine=None) -> jnp.ndarray:
     """r -> r^n mod n^2, Montgomery domain.  Precomputable offline
-    (encryption-noise precompute — amortizes the expensive modexp)."""
-    rm = to_mont(jnp.asarray(r_limbs, _U32), pub.mod_n2)
-    return mont_exp_const(rm, pub.n, pub.mod_n2)
+    (encryption-noise precompute — amortizes the expensive modexp; the
+    runtime's noise pool runs exactly this on the scheduler's thread
+    pool, overlapped with the Protocol-3 legs)."""
+    eng = _eng(engine)
+    rm = eng.to_mont(jnp.asarray(r_limbs, _U32), pub.mod_n2)
+    return eng.mont_exp_const(rm, pub.n, pub.mod_n2)
 
 
-def encrypt_with_noise(pub: PublicKey, m_limbs, rn_mont) -> jnp.ndarray:
-    """Enc(m; r) = (1 + m n) * r^n mod n^2, given precomputed r^n."""
+def encrypt_with_noise(pub: PublicKey, m_limbs, rn_mont,
+                       engine=None) -> jnp.ndarray:
+    """Enc(m; r) = (1 + m n) * r^n mod n^2, given precomputed r^n.
+    With pooled noise, encryption off the critical path costs ~one
+    mont_mul."""
+    eng = _eng(engine)
     m = jnp.asarray(m_limbs, _U32)
     mn = big_mul_full(m, jnp.asarray(pub.n_limbs, _U32), pub.Ln2)
     c0 = add_small(mn, 1)
-    return mont_mul(to_mont(c0, pub.mod_n2), jnp.asarray(rn_mont, _U32),
-                    pub.mod_n2)
+    return eng.mont_mul(eng.to_mont(c0, pub.mod_n2),
+                        jnp.asarray(rn_mont, _U32), pub.mod_n2)
 
 
-def encrypt(pub: PublicKey, m_limbs, rng: np.random.Generator | None = None
-            ) -> jnp.ndarray:
+def encrypt(pub: PublicKey, m_limbs, rng: np.random.Generator | None = None,
+            engine=None) -> jnp.ndarray:
     m = jnp.asarray(m_limbs, _U32)
     batch = int(np.prod(m.shape[:-1])) if m.ndim > 1 else 1
     r = raw_noise(pub, batch, rng).reshape(m.shape[:-1] + (pub.Ln2,))
-    return encrypt_with_noise(pub, m, noise_to_mont(pub, r))
+    return encrypt_with_noise(pub, m, noise_to_mont(pub, r, engine),
+                              engine)
 
 
-def decrypt(priv: PrivateKey, c_mont) -> jnp.ndarray:
+def decrypt(priv: PrivateKey, c_mont, engine=None) -> jnp.ndarray:
     """-> plaintext limbs (…, Ln)."""
+    eng = _eng(engine)
     pub = priv.pub
-    u_m = mont_exp_bits(jnp.asarray(c_mont, _U32),
-                        jnp.asarray(priv.lam_bits), pub.mod_n2)
-    u = from_mont(u_m, pub.mod_n2)
+    u_m = eng.mont_exp_bits(jnp.asarray(c_mont, _U32),
+                            jnp.asarray(priv.lam_bits), pub.mod_n2)
+    u = eng.from_mont(u_m, pub.mod_n2)
     um1 = sub_small(u, 1)
     k = mul_low(um1, jnp.asarray(priv.hensel_n, _U32), pub.Ln2)[..., :pub.Ln]
-    return mont_mul(k, jnp.asarray(priv.mu_mont, _U32), pub.mod_n)
+    return eng.mont_mul(k, jnp.asarray(priv.mu_mont, _U32), pub.mod_n)
 
 
-def _dec_component(comp: CRTComponent, c_modp2_mont) -> jnp.ndarray:
+def _dec_component(comp: CRTComponent, c_modp2_mont, eng) -> jnp.ndarray:
     """m_p = L_p(c^{p-1} mod p²) · h_p mod p."""
-    u_m = mont_exp_bits(c_modp2_mont, jnp.asarray(comp.lam_bits),
-                        comp.mod_p2)
-    u = from_mont(u_m, comp.mod_p2)
+    u_m = eng.mont_exp_bits(c_modp2_mont, jnp.asarray(comp.lam_bits),
+                            comp.mod_p2)
+    u = eng.from_mont(u_m, comp.mod_p2)
     um1 = sub_small(u, 1)
     k = mul_low(um1, jnp.asarray(comp.hensel_p, _U32),
                 comp.mod_p2.L)[..., :comp.mod_p.L]
-    return mont_mul(k, jnp.asarray(comp.h_mont, _U32), comp.mod_p)
+    return eng.mont_mul(k, jnp.asarray(comp.h_mont, _U32), comp.mod_p)
 
 
-def decrypt_crt(priv: PrivateKey, c_mont) -> jnp.ndarray:
+def decrypt_crt(priv: PrivateKey, c_mont, engine=None) -> jnp.ndarray:
     """CRT decryption (≈4× fewer limb-ops than `decrypt`): two half-size
     modexps with half-size exponents, then Garner recombination
       m = m_p + p · ((m_q − m_p) · p^{-1} mod q).
     Returns plaintext limbs (…, Ln), identical to `decrypt` (tested)."""
+    eng = _eng(engine)
     pub = priv.pub
     cp, cq = priv.crt_p, priv.crt_q
     c = jnp.asarray(c_mont, _U32)
     # ciphertext is Montgomery mod n²: leave the domain, then reduce
-    c_plain = from_mont(c, pub.mod_n2)
-    cp2 = to_mont(_reduce_mod(c_plain, cp.mod_p2), cp.mod_p2)
-    cq2 = to_mont(_reduce_mod(c_plain, cq.mod_p2), cq.mod_p2)
-    m_p = _dec_component(cp, cp2)                       # (…, Lp) < p
-    m_q = _dec_component(cq, cq2)                       # (…, Lq) < q
+    c_plain = eng.from_mont(c, pub.mod_n2)
+    cp2 = eng.to_mont(_reduce_mod(c_plain, cp.mod_p2, eng), cp.mod_p2)
+    cq2 = eng.to_mont(_reduce_mod(c_plain, cq.mod_p2, eng), cq.mod_p2)
+    m_p = _dec_component(cp, cp2, eng)                  # (…, Lp) < p
+    m_q = _dec_component(cq, cq2, eng)                  # (…, Lq) < q
     # Garner: t = (m_q − m_p) mod q;  m = m_p + p·(t·p^{-1} mod q)
     Lq = cq.mod_p.L
     m_p_padq = jnp.pad(m_p, [(0, 0)] * (m_p.ndim - 1)
                        + [(0, max(0, Lq - m_p.shape[-1]))])[..., :Lq]
     from repro.crypto.bigint import mod_sub
-    t = mod_sub(m_q, _reduce_mod(m_p_padq, cq.mod_p), cq.mod_p)
-    u = mont_mul(t, jnp.asarray(priv.q_pinv_mont, _U32), cq.mod_p)
+    t = mod_sub(m_q, _reduce_mod(m_p_padq, cq.mod_p, eng), cq.mod_p)
+    u = eng.mont_mul(t, jnp.asarray(priv.q_pinv_mont, _U32), cq.mod_p)
     pu = big_mul_full(jnp.asarray(int_to_limbs(cp.prime, cp.mod_p.L), _U32),
                       u, pub.Ln)
     m_p_padn = jnp.pad(m_p, [(0, 0)] * (m_p.ndim - 1)
@@ -280,55 +307,59 @@ def decrypt_crt(priv: PrivateKey, c_mont) -> jnp.ndarray:
     return out
 
 
-def _fold_below(x: jnp.ndarray, mod: Modulus) -> jnp.ndarray:
+def _fold_below(x: jnp.ndarray, mod: Modulus, eng) -> jnp.ndarray:
     """x mod N for canonical x < R = 2^(12·L): Montgomery round-trip —
     mont_mul's bound holds for a < R, b < N, so to_mont then from_mont is
     an exact general reduction."""
-    return from_mont(to_mont(x, mod), mod)
+    return eng.from_mont(eng.to_mont(x, mod), mod)
 
 
-def _reduce_mod(x: jnp.ndarray, mod: Modulus) -> jnp.ndarray:
+def _reduce_mod(x: jnp.ndarray, mod: Modulus, eng=None) -> jnp.ndarray:
     """General reduction x mod N for canonical x of any width: split into
     R-sized chunks, Horner fold (acc·R + chunk) with Montgomery ops."""
     from repro.crypto.bigint import mod_add
+    eng = _eng(eng)
     L = mod.L
     Lx = x.shape[-1]
     n_chunks = -(-Lx // L)
     xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n_chunks * L - Lx)])
-    acc = _fold_below(xp[..., (n_chunks - 1) * L:n_chunks * L], mod)
+    acc = _fold_below(xp[..., (n_chunks - 1) * L:n_chunks * L], mod, eng)
     for i in range(n_chunks - 2, -1, -1):
-        acc = to_mont(acc, mod)                 # acc · R mod N
-        chunk = _fold_below(xp[..., i * L:(i + 1) * L], mod)
+        acc = eng.to_mont(acc, mod)             # acc · R mod N
+        chunk = _fold_below(xp[..., i * L:(i + 1) * L], mod, eng)
         acc = mod_add(acc, chunk, mod)
     return acc
 
 
-def add_ct(pub: PublicKey, c1, c2) -> jnp.ndarray:
+def add_ct(pub: PublicKey, c1, c2, engine=None) -> jnp.ndarray:
     """[[a]] ⊕ [[b]] = [[a + b mod n]]."""
-    return mont_mul(jnp.asarray(c1, _U32), jnp.asarray(c2, _U32), pub.mod_n2)
+    return _eng(engine).mont_mul(jnp.asarray(c1, _U32),
+                                 jnp.asarray(c2, _U32), pub.mod_n2)
 
 
-def smul_bits(pub: PublicKey, c, exp_bits) -> jnp.ndarray:
+def smul_bits(pub: PublicKey, c, exp_bits, engine=None) -> jnp.ndarray:
     """[[a]] ⊗ k = [[a * k mod n]], k given as an MSB-first bit vector
     (traced or constant).  Constant-time ladder."""
-    return mont_exp_bits(jnp.asarray(c, _U32), jnp.asarray(exp_bits),
-                         pub.mod_n2)
+    return _eng(engine).mont_exp_bits(jnp.asarray(c, _U32),
+                                      jnp.asarray(exp_bits), pub.mod_n2)
 
 
-def smul_const(pub: PublicKey, c, k: int) -> jnp.ndarray:
+def smul_const(pub: PublicKey, c, k: int, engine=None) -> jnp.ndarray:
     if k < 0:
         raise ValueError("lift negative multipliers to residues first")
-    return mont_exp_const(jnp.asarray(c, _U32), k, pub.mod_n2)
+    # mont_exp_const memoizes the (k, width) bit decomposition
+    return _eng(engine).mont_exp_const(jnp.asarray(c, _U32), k, pub.mod_n2)
 
 
-def hom_sum(pub: PublicKey, c, axis: int = 0) -> jnp.ndarray:
+def hom_sum(pub: PublicKey, c, axis: int = 0, engine=None) -> jnp.ndarray:
     """⊕-reduce a batch of ciphertexts along `axis` (tree reduction —
     the same schedule the mesh collective uses, see distributed/)."""
+    eng = _eng(engine)
     c = jnp.asarray(c, _U32)
     c = jnp.moveaxis(c, axis, 0)
     while c.shape[0] > 1:
         half = c.shape[0] // 2
-        merged = mont_mul(c[:half], c[half:2 * half], pub.mod_n2)
+        merged = eng.mont_mul(c[:half], c[half:2 * half], pub.mod_n2)
         if c.shape[0] % 2:
             merged = jnp.concatenate([merged, c[2 * half:]], axis=0)
         c = merged

@@ -1,0 +1,175 @@
+"""Fused Pallas TPU kernels for the Paillier hot path: the full
+constant-time Montgomery ladder and the windowed HE matvec, each inside
+ONE `pallas_call`.
+
+`ops.mont_exp_bits` runs the ladder as 2×nbits separate `montmul_tiled`
+launches — every square and every multiply round-trips the accumulator
+through HBM.  The two kernels here keep the working set resident in
+VMEM for the whole ladder:
+
+* `mont_exp_fused` — grid (batch/TILE_B,); blocks base (TILE_B, L),
+  bits (TILE_B, nbits), N and R mod N (1, L).  The square/select/multiply
+  loop is a `fori_loop` over nbits with two `_montmul_block` calls per
+  step; the select is a lane-wise `where`, so the ladder stays
+  constant-time (appropriate for secret exponents).  VMEM per program:
+  ~4 blocks × TILE_B × L × 4 B ≈ 0.4 MB at TILE_B=128, L=176 (2048-bit)
+  plus TILE_B × nbits bits.
+
+* `he_matvec_fused` — Protocol 3's plaintext-matrix × ciphertext-vector
+  product, fixed-window form.  Grid (m/TILE_M,); blocks cts (n, L),
+  digits (levels, n, TILE_M) (MSB-first window digits, precomputed once
+  per batch by `protocols.EncodedFeatures`).  The kernel builds the
+  2^window power table in VMEM, then per digit level folds the selected
+  powers into a running ⊕-product and squares the accumulator `window`
+  times.  Sequential fold and the library's tree fold compute the same
+  group element, and canonical Montgomery residues are unique, so the
+  output is bit-exact vs `protocols._he_matvec_windowed`.  VMEM per
+  program: table 2^w × n × L × 4 B — the `ops.he_matvec_fused` wrapper
+  chunks n to keep this bounded (chunk outputs combine homomorphically,
+  again bit-exact).
+
+Both kernels reuse `montmul._montmul_block` (traced inline, so each
+kernel's IR is still self-contained when it ships to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.montmul import _montmul_block
+
+_U32 = jnp.uint32
+
+DEFAULT_TILE_B = 128
+DEFAULT_TILE_M = 128
+DEFAULT_CHUNK_N = 512
+
+
+# ---------------------------------------------------------------------------
+# Fused constant-time ladder
+# ---------------------------------------------------------------------------
+
+def _exp_kernel(n0inv: int, L: int, nbits: int,
+                base_ref, bits_ref, n_ref, r1_ref, o_ref):
+    base = base_ref[...]                        # (TB, L)
+    bits = bits_ref[...]                        # (TB, nbits) MSB-first
+    n = n_ref[...]                              # (1, L)
+    acc0 = jnp.broadcast_to(r1_ref[...], base.shape)   # mont(1)
+
+    def step(i, acc):
+        acc = _montmul_block(acc, acc, n, n0inv, L)
+        mul = _montmul_block(acc, base, n, n0inv, L)
+        bit = jax.lax.dynamic_slice_in_dim(bits, i, 1, axis=1)   # (TB, 1)
+        return jnp.where(bit == 1, mul, acc)
+
+    o_ref[...] = jax.lax.fori_loop(0, nbits, step, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("n0inv", "L", "tile_b",
+                                             "interpret"))
+def mont_exp_tiled(base: jnp.ndarray, bits: jnp.ndarray, n: jnp.ndarray,
+                   r1: jnp.ndarray, *, n0inv: int, L: int,
+                   tile_b: int = DEFAULT_TILE_B,
+                   interpret: bool = True) -> jnp.ndarray:
+    """base: (batch, L) Montgomery-domain canonical; bits: (batch, nbits)
+    MSB-first.  Returns base^e in the Montgomery domain, canonical.
+    batch must be a multiple of tile_b (ops.py pads)."""
+    batch, nbits = bits.shape
+    assert base.shape == (batch, L)
+    assert batch % tile_b == 0, "pad batch to a tile multiple in ops.py"
+    grid = (batch // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_exp_kernel, n0inv, L, nbits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, L), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, nbits), lambda i: (i, 0)),
+            pl.BlockSpec((1, L), lambda i: (0, 0)),
+            pl.BlockSpec((1, L), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, L), jnp.uint32),
+        interpret=interpret,
+    )(base, bits, n.reshape(1, L), r1.reshape(1, L))
+
+
+# ---------------------------------------------------------------------------
+# Fused windowed HE matvec
+# ---------------------------------------------------------------------------
+
+def _matvec_kernel(n0inv: int, L: int, window: int, levels: int,
+                   nrows: int, cts_ref, dig_ref, n_ref, r1_ref, o_ref):
+    cts = cts_ref[...]                          # (nrows, L)
+    digs = dig_ref[...]                         # (levels, nrows, TM)
+    n = n_ref[...]                              # (1, L)
+    one = r1_ref[...]                           # (1, L)
+    TM = o_ref.shape[0]
+    npow = 1 << window
+
+    # power table c_i^j for j < 2^window: (npow, nrows, L) in VMEM
+    table = jnp.zeros((npow, nrows, L), _U32)
+    table = table.at[0].set(jnp.broadcast_to(one, (nrows, L)))
+    table = table.at[1].set(cts)
+
+    def build(j, tab):
+        prev = jax.lax.dynamic_index_in_dim(tab, j - 1, axis=0,
+                                            keepdims=False)
+        nxt = _montmul_block(prev, cts, n, n0inv, L)
+        return jax.lax.dynamic_update_index_in_dim(tab, nxt, j, axis=0)
+
+    table = jax.lax.fori_loop(2, npow, build, table)
+
+    acc = jnp.broadcast_to(one, (TM, L))
+    for lvl in range(levels):                   # static: levels ≈ 6
+        for _ in range(window):
+            acc = _montmul_block(acc, acc, n, n0inv, L)
+        dig_lvl = digs[lvl]                     # (nrows, TM)
+
+        def row(i, p):
+            di = jax.lax.dynamic_index_in_dim(dig_lvl, i, axis=0,
+                                              keepdims=False)      # (TM,)
+            row_tab = jax.lax.dynamic_index_in_dim(table, i, axis=1,
+                                                   keepdims=False)  # (npow, L)
+            # one-hot select (no gather: TPU-friendly lane-wise wheres)
+            sel = jnp.broadcast_to(one, (TM, L))
+            for j in range(1, npow):
+                sel = jnp.where((di == j)[:, None], row_tab[j][None], sel)
+            return _montmul_block(p, sel, n, n0inv, L)
+
+        prod = jax.lax.fori_loop(0, nrows, row,
+                                 jnp.broadcast_to(one, (TM, L)))
+        acc = _montmul_block(acc, prod, n, n0inv, L)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("n0inv", "L", "window",
+                                             "tile_m", "interpret"))
+def he_matvec_tiled(cts: jnp.ndarray, digits: jnp.ndarray, n: jnp.ndarray,
+                    r1: jnp.ndarray, *, n0inv: int, L: int, window: int,
+                    tile_m: int = DEFAULT_TILE_M,
+                    interpret: bool = True) -> jnp.ndarray:
+    """cts: (nrows, L) Montgomery ciphertexts; digits: (levels, nrows, m)
+    MSB-first window digits.  Returns (m, L) ciphertexts of
+    Σ_i digit-value_i · m_i.  m must be a multiple of tile_m (ops.py
+    pads with zero digits — the padded columns fold to mont(1) and are
+    dropped)."""
+    levels, nrows, m = digits.shape
+    assert cts.shape == (nrows, L)
+    assert m % tile_m == 0, "pad m to a tile multiple in ops.py"
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        functools.partial(_matvec_kernel, n0inv, L, window, levels, nrows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nrows, L), lambda i: (0, 0)),
+            pl.BlockSpec((levels, nrows, tile_m), lambda i: (0, 0, i)),
+            pl.BlockSpec((1, L), lambda i: (0, 0)),
+            pl.BlockSpec((1, L), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, L), jnp.uint32),
+        interpret=interpret,
+    )(cts, digits, n.reshape(1, L), r1.reshape(1, L))

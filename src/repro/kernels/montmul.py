@@ -35,9 +35,10 @@ DEFAULT_TILE_B = 128
 
 
 def _montmul_block(a, b, n, n0inv: int, L: int):
-    """CIOS Montgomery product on a (TB, L) block (shared by the kernel
-    body and — deliberately — nothing else: the kernel is self-contained
-    so its IR is exactly what ships to Mosaic)."""
+    """CIOS Montgomery product on a (TB, L) block.  Shared only by
+    kernel bodies (this one and the fused ladders in montexp.py) — it is
+    traced inline, so each kernel's IR is still self-contained when it
+    ships to Mosaic."""
     TB = a.shape[0]
     t = jnp.zeros((TB, L + 1), _U32)
 

@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.crypto.bigint import Modulus
 from repro.crypto.ring import R64
+from repro.kernels import montexp as montexp_k
 from repro.kernels import montmul as montmul_k
 from repro.kernels import ring_matmul as ringmm_k
 
@@ -41,8 +42,9 @@ def montmul(a: jnp.ndarray, b: jnp.ndarray, mod: Modulus, *,
 
 def mont_exp_bits(base: jnp.ndarray, bits: jnp.ndarray, mod: Modulus, *,
                   interpret: bool = True) -> jnp.ndarray:
-    """Kernel-backed constant-time ladder (same contract as
-    bigint.mont_exp_bits)."""
+    """Per-step kernel ladder (same contract as bigint.mont_exp_bits):
+    2×nbits separate `montmul_tiled` launches — kept as the baseline the
+    fused kernel is benchmarked against (kernel_bench)."""
     bshape = jnp.broadcast_shapes(base.shape[:-1], bits.shape[:-1])
     base = jnp.broadcast_to(base, bshape + base.shape[-1:])
     bits = jnp.broadcast_to(bits.astype(_U32), bshape + bits.shape[-1:])
@@ -55,6 +57,67 @@ def mont_exp_bits(base: jnp.ndarray, bits: jnp.ndarray, mod: Modulus, *,
 
     acc, _ = jax.lax.scan(step, acc0, jnp.moveaxis(bits, -1, 0))
     return acc
+
+
+def mont_exp_fused(base: jnp.ndarray, bits: jnp.ndarray, mod: Modulus, *,
+                  tile_b: int = montexp_k.DEFAULT_TILE_B,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Fused-ladder kernel (same contract as bigint.mont_exp_bits): the
+    whole constant-time square-and-multiply loop in ONE pallas_call with
+    the accumulator resident in VMEM."""
+    base = jnp.asarray(base, _U32)
+    bits = jnp.asarray(bits, _U32)
+    bshape = jnp.broadcast_shapes(base.shape[:-1], bits.shape[:-1])
+    L = mod.L
+    nbits = bits.shape[-1]
+    base = jnp.broadcast_to(base, bshape + (L,))
+    bits = jnp.broadcast_to(bits, bshape + (nbits,))
+    flat = int(np.prod(bshape)) if bshape else 1
+    b2 = base.reshape(flat, L)
+    e2 = bits.reshape(flat, nbits)
+    tb = min(tile_b, max(flat, 1))
+    pad = (-flat) % tb
+    if pad:
+        b2 = jnp.concatenate([b2, jnp.zeros((pad, L), _U32)], 0)
+        e2 = jnp.concatenate([e2, jnp.zeros((pad, nbits), _U32)], 0)
+    out = montexp_k.mont_exp_tiled(
+        b2, e2, jnp.asarray(mod.limbs, _U32), jnp.asarray(mod.r1, _U32),
+        n0inv=mod.n0inv, L=L, tile_b=tb, interpret=interpret)
+    return out[:flat].reshape(bshape + (L,))
+
+
+def he_matvec_fused(cts: jnp.ndarray, digits: jnp.ndarray, mod: Modulus, *,
+                    window: int,
+                    tile_m: int = montexp_k.DEFAULT_TILE_M,
+                    chunk_n: int = montexp_k.DEFAULT_CHUNK_N,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Fused windowed HE matvec: cts (n, L) Montgomery ciphertexts,
+    digits (n, m, levels) MSB-first window digits (the EncodedFeatures
+    layout).  Returns (m, L) ciphertexts of Σ_i exps[i,j]·m_i, bit-exact
+    vs protocols' windowed library path.  n is chunked to bound the
+    in-kernel power table's VMEM footprint; chunk outputs combine with a
+    homomorphic ⊕ (an exact group product, so chunking preserves
+    bit-exactness)."""
+    cts = jnp.asarray(cts, _U32)
+    digits = jnp.asarray(digits, _U32)
+    n, m, levels = digits.shape
+    L = mod.L
+    tm = min(tile_m, max(m, 1))
+    pad_m = (-m) % tm
+    dt = jnp.moveaxis(digits, -1, 0)            # (levels, n, m)
+    if pad_m:
+        dt = jnp.concatenate(
+            [dt, jnp.zeros((levels, n, pad_m), _U32)], axis=-1)
+    out = None
+    for n0 in range(0, n, chunk_n):
+        n1 = min(n, n0 + chunk_n)
+        part = montexp_k.he_matvec_tiled(
+            cts[n0:n1], dt[:, n0:n1, :], jnp.asarray(mod.limbs, _U32),
+            jnp.asarray(mod.r1, _U32), n0inv=mod.n0inv, L=L,
+            window=window, tile_m=tm, interpret=interpret)
+        out = part if out is None else montmul(out, part, mod,
+                                               interpret=interpret)
+    return out[:m]
 
 
 def ring_matmul(a: R64, b: R64, *, tm: int = ringmm_k.DEFAULT_TM,

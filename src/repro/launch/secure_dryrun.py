@@ -25,7 +25,8 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.distributed.shardmap_compat import shard_map    # noqa: E402
 
-from repro.crypto.bigint import Modulus, mont_mul, mont_one  # noqa: E402
+from repro.crypto.bigint import Modulus, mont_one            # noqa: E402
+from repro.crypto import engine as engine_mod                # noqa: E402
 from repro.crypto import fixed_point                         # noqa: E402
 from repro.crypto.ring import R64                            # noqa: E402
 from repro.crypto import ring                                # noqa: E402
@@ -56,7 +57,7 @@ def flops_per_montmul(L: int) -> float:
 
 
 def make_secure_grad_step(mesh, mod: Modulus, width: int, window: int = 1,
-                          shard_mode: str = "feature"):
+                          shard_mode: str = "feature", engine=None):
     """Builds the jitted 2-party Protocol-3 step.
 
     Global shapes (pod-major):
@@ -67,7 +68,17 @@ def make_secure_grad_step(mesh, mod: Modulus, width: int, window: int = 1,
     ring shares of the local term X^T⟨d⟩_self.
     window=1: bit-serial (paper-faithful baseline); window=4: fixed-window
     ladder (§Perf optimized variant, ~3.6× fewer Montgomery products).
+    `engine` routes the Montgomery products through the crypto compute
+    engine — the same dispatch the trainer/runtime hits — so `--engine
+    pallas` lowers the step with the fused kernels inside the shard_map.
+    Default None = the jnp library (keeps the XLA cost model exact).
     """
+    eng = engine if engine is not None \
+        else engine_mod.CryptoEngine(backend="jnp")
+
+    def mont_mul(a, b, m):
+        return eng.mont_mul(a, b, m)
+
     data_size = mesh.shape["data"]
     model_size = mesh.shape["model"]
     L2 = mod.L
@@ -168,6 +179,10 @@ def main() -> None:
                     help="1 = paper-faithful bit-serial; 4 = §Perf variant")
     ap.add_argument("--shard-mode", default="feature",
                     choices=("feature", "sample2d"))
+    ap.add_argument("--engine", default="jnp",
+                    choices=("jnp", "pallas-interpret", "pallas"),
+                    help="crypto compute engine for the Montgomery "
+                         "products (jnp keeps the cost model exact)")
     ap.add_argument("--out", default="results/secure_dryrun.json")
     args = ap.parse_args()
 
@@ -176,7 +191,8 @@ def main() -> None:
     # lowering, but Modulus wants a genuine odd modulus for its constants
     mod = Modulus.make((1 << (2 * args.key_bits)) - 159)
     step = make_secure_grad_step(mesh, mod, args.width, args.window,
-                                 args.shard_mode)
+                                 args.shard_mode,
+                                 engine=engine_mod.make(args.engine))
 
     n, m, L2 = args.samples, args.features, mod.L
     u32 = jnp.uint32
@@ -221,6 +237,7 @@ def main() -> None:
     res = {
         "kind": "secure_efmvfl_grad_step",
         "mesh": "2x16x16", "key_bits": args.key_bits,
+        "engine": args.engine,
         "samples": n, "features": m, "exp_width": args.width,
         "window": args.window, "shard_mode": args.shard_mode,
         "montmuls_per_dev": mm,

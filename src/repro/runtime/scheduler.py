@@ -97,10 +97,35 @@ class VFLScheduler:
         self.by_name = {p.name: p for p in self.parties}
         self.transport.bind(self.parties)
         self.n_total = self.parties[0].X.shape[0]
+        # noise-pool prefetch: hand the backend the transport's executor
+        # so the data-independent r^n modexps overlap Protocol 3
+        ex = getattr(self.transport, "executor", None)
+        if ex is not None and hasattr(self.backend, "attach_noise_executor"):
+            self.backend.attach_noise_executor(ex)
 
     @property
     def label_party(self) -> LabelParty:
         return self.parties[0]
+
+    def _prefetch_noise(self, cps: tuple[str, str], nb: int) -> None:
+        """Schedule this iteration's encryption noise (r^n modexps —
+        data-independent) on the transport's pool before Protocol 1 runs,
+        so the hot Protocol-3 path pays ~one mont_mul per encryption.
+        The raw r draws stay on the conductor thread, so the entropy
+        stream is consumed deterministically; the values themselves never
+        reach a decrypted quantity, so the trained model is unchanged."""
+        be = self.backend
+        if not hasattr(be, "prefetch_noise"):
+            return
+        for cp in cps:
+            be.prefetch_noise(cp, nb)          # [[⟨d⟩]] under own key
+        for p in self.parties:                 # mask encryptions per leg
+            m = p.X.shape[1]
+            if p.name in cps:
+                be.prefetch_noise(cps[1] if p.name == cps[0] else cps[0], m)
+            else:
+                for cp in cps:
+                    be.prefetch_noise(cp, m)
 
     # -- one iteration ------------------------------------------------------
     def _select_cps(self) -> tuple[str, str]:
@@ -119,6 +144,8 @@ class VFLScheduler:
         for p in self.parties:
             p.begin_iteration(idx, cps, nb, self.mask_bound)
         cp0, cp1 = self.by_name[cps[0]], self.by_name[cps[1]]
+        if tp.overlaps_p3:
+            self._prefetch_noise(cps, nb)
 
         # -- Protocol 1: share intermediate results -------------------------
         for i, p in enumerate(self.parties):
@@ -172,6 +199,8 @@ class VFLScheduler:
         # -- stop flag ------------------------------------------------------
         tp.post_all(self.label_party.emit_flags(self.names[1:]))
         tp.pump()
+        if hasattr(self.backend, "discard_pooled_noise"):
+            self.backend.discard_pooled_noise()   # bound pool to one iter
 
     # -- training loop ------------------------------------------------------
     def run(self):

@@ -63,6 +63,10 @@ class Transport:
     #: serial to match the seed trainer's draw order).
     overlaps_p3 = False
 
+    #: background executor for data-independent precompute (the Paillier
+    #: noise pool).  None = fully synchronous transport.
+    executor = None
+
     def __init__(self, meter: CommMeter | None = None):
         self.meter = meter if meter is not None else CommMeter()
         self.rounds = 0
@@ -146,6 +150,12 @@ class PipelinedTransport(Transport):
                  max_workers: int | None = None):
         super().__init__(meter)
         self._pool = ThreadPoolExecutor(max_workers=max_workers or 8)
+
+    @property
+    def executor(self):
+        """The sweep pool doubles as the noise-prefetch executor: r^n
+        modexps scheduled on it overlap the Protocol-3 handler legs."""
+        return self._pool
 
     def wrap_rng(self, rng: np.random.Generator):
         return LockedRNG(rng)
