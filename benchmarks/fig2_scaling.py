@@ -1,34 +1,222 @@
-"""Paper Figure 2 — EFMVFL comm + runtime vs number of participants
-(paper: both grow ~linearly; runtime jumps 2→3 because non-CP parties do
-two cipher products)."""
+"""Paper Figure 2, upgraded to the k-scaling benchmark — EFMVFL comm +
+per-iteration wall-clock vs number of participants k, sequential
+(`LocalTransport`) vs concurrent-leg (`PipelinedTransport`) schedules.
+
+The paper's claim (§5.1, Fig. 2): communication grows ~linearly in k and
+the runtime jump from 2→3 parties reflects non-CP parties doing two
+cipher products.  The runtime claim this repo adds on top: with the
+concurrent-leg schedule the k−2 non-CP Protocol-3 legs are independent
+pool futures, so per-iteration wall-clock stays below k× the k=2 cost
+(the sub-k gauge below) while comm (a transport-metered invariant)
+stays identical to the sequential run.
+
+Full mode writes machine-readable ``BENCH_scaling.json`` at the repo
+root (schema ``bench_scaling/v1``): mock-backend rows for
+k ∈ {2, 4, 8, 16} × both GLMs × both transports — the comm-scaling
+curve and the scheduler-concurrency acceptance gauge (t_k < k·t_2 per
+iteration, steady-state) — plus a real-Paillier timing section
+(logistic, k ∈ {2, 4, 8}, small key/batch) where wall-clock is
+genuinely HE-bound, kept as the honest single-host reference (with its
+CPU-contention caveat recorded in the JSON).  ``--smoke`` shrinks
+everything and skips the JSON write (CI drift check).
+
+  PYTHONPATH=src python -m benchmarks.fig2_scaling [--smoke] [--out PATH]
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
 
 import numpy as np
 
 from repro.core import trainer
 from repro.core.trainer import PartyData, VFLConfig
 from repro.data import synthetic, vertical
+from repro.runtime import LocalTransport, PipelinedTransport
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_SCALING_PATH = REPO_ROOT / "BENCH_scaling.json"
+
+KS = (2, 4, 8, 16)
+GLMS = ("logistic", "poisson")
 
 
-def run(max_parties: int = 6, iters: int = 8) -> list[dict]:
-    X, y = synthetic.credit_default(n=4000, d=24, seed=4)
+def _dataset(glm: str, n: int):
+    if glm == "poisson":
+        return synthetic.dvisits(n=n, seed=4)
+    return synthetic.credit_default(n=n, d=24, seed=4)
+
+
+def _parties(X: np.ndarray, k: int) -> list[PartyData]:
     base = vertical.split_columns(X, 2)
+    parts = vertical.replicate_provider(base, k)
+    names = ["C"] + [f"B{i}" for i in range(1, k)]
+    return [PartyData(nm, p) for nm, p in zip(names, parts)]
+
+
+def _transports():
+    return (("local", lambda: LocalTransport()),
+            ("pipelined", lambda: PipelinedTransport()))
+
+
+def _row(glm, k, he, tname, res) -> dict:
+    return {
+        "glm": glm, "parties": k, "he_backend": he, "transport": tname,
+        "comm_mb": round(res.meter.total_mb, 3),
+        "rounds_per_iter": round(res.rounds / max(res.n_iter, 1), 1),
+        "runtime_s": round(res.runtime_s, 3),
+        "per_iter_s": round(res.runtime_s / max(res.n_iter, 1), 4),
+        "n_iter": res.n_iter,
+    }
+
+
+def _linear_fit(rows, glm) -> dict:
+    """Comm vs k straight-line fit over the pipelined mock rows (the
+    paper fits Fig. 2 to a line; residuals gauge the linearity claim)."""
+    pts = sorted((r["parties"], r["comm_mb"]) for r in rows
+                 if r["glm"] == glm and r["transport"] == "pipelined"
+                 and r["he_backend"] == "mock")
+    ks = np.array([p[0] for p in pts], float)
+    comm = np.array([p[1] for p in pts], float)
+    coef = np.polyfit(ks, comm, 1)
+    resid = comm - np.polyval(coef, ks)
+    return {"glm": glm, "fit": "comm_mb ~ a*k + b",
+            "slope_mb_per_party": round(float(coef[0]), 3),
+            "max_residual_mb": round(float(np.max(np.abs(resid))), 3)}
+
+
+def run(ks=KS, glms=GLMS, iters: int = 6, batch: int = 512,
+        n_samples: int = 4000, smoke: bool = False,
+        warmup: bool = True) -> dict:
+    """Returns the full report dict (rows + fits + concurrency summary).
+    The mock rows keep comm/rounds honest at every k (the backend meters
+    identical bytes to Paillier) and gauge the scheduler's own k-scaling;
+    the Paillier section times the real HE-bound iteration.  `warmup`
+    runs one untimed iteration per (glm, backend) first so every row is
+    steady-state (jit caches warm) — shapes are k-independent, so one
+    k=2 warmup covers all ks."""
+    t_start = time.perf_counter()
     rows = []
-    for k in range(2, max_parties + 1):
-        parts = vertical.replicate_provider(base, k)
-        names = ["C"] + [f"B{i}" for i in range(1, k)]
-        parties = [PartyData(nm, p) for nm, p in zip(names, parts)]
-        cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=iters,
-                        batch_size=512, he_backend="mock", tol=0.0, seed=5)
-        res = trainer.train_vfl(parties, y, cfg)
-        rows.append({"parties": k,
-                     "comm_mb": round(res.meter.total_mb, 2),
-                     "runtime_s": round(res.runtime_s, 2)})
-    # linearity check (paper fits a straight line)
-    comm = np.array([r["comm_mb"] for r in rows])
-    slope = np.polyfit(np.arange(len(comm)), comm, 1)[0]
-    resid = comm - np.polyval(np.polyfit(np.arange(len(comm)), comm, 1),
-                              np.arange(len(comm)))
-    rows.append({"fit": "linear", "slope_mb_per_party": round(float(slope), 2),
-                 "max_residual_mb": round(float(np.max(np.abs(resid))), 3)})
-    return rows
+    for glm in glms:
+        X, y = _dataset(glm, n_samples)
+        if warmup:
+            wcfg = VFLConfig(glm=glm, lr=0.1, max_iter=1,
+                             batch_size=batch, he_backend="mock",
+                             tol=0.0, seed=5)
+            for _, make_tp in _transports():
+                trainer.train_vfl(_parties(X, 2), y, wcfg,
+                                  transport=make_tp())
+        for k in ks:
+            parties = _parties(X, k)
+            cfg = VFLConfig(glm=glm, lr=0.1, max_iter=iters,
+                            batch_size=batch, he_backend="mock", tol=0.0,
+                            seed=5)
+            for tname, make_tp in _transports():
+                res = trainer.train_vfl(parties, y, cfg,
+                                        transport=make_tp())
+                rows.append(_row(glm, k, "mock", tname, res))
+
+    # real-Paillier reference rows: small key/batch so a CPU full run
+    # stays in minutes, but the per-leg cost is genuinely HE-dominated.
+    # Caveat recorded in the JSON: on a single CPU host the legs contend
+    # for the same cores/GIL, so thread-level concurrency shows as
+    # sub-k-linear growth at best here — the acceptance gauge is the
+    # mock section (scheduler scaling); real deployments run each
+    # party's legs on its own hardware.
+    pk = tuple(k for k in ks if k <= 8) or ks[:1]
+    if not smoke:
+        Xp, yp = _dataset("logistic", 512)
+        pcfg = dict(glm="logistic", lr=0.1, batch_size=16,
+                    he_backend="paillier", key_bits=144, tol=0.0, seed=5)
+        if warmup:
+            for _, make_tp in _transports():
+                trainer.train_vfl(_parties(Xp, 2), yp,
+                                  VFLConfig(max_iter=1, **pcfg),
+                                  transport=make_tp())
+        for k in pk:
+            parties = _parties(Xp, k)
+            cfg = VFLConfig(max_iter=2, **pcfg)
+            for tname, make_tp in _transports():
+                res = trainer.train_vfl(parties, y=yp, cfg=cfg,
+                                        transport=make_tp())
+                rows.append(_row("logistic", k, "paillier", tname, res))
+
+    fits = [_linear_fit(rows, glm) for glm in glms]
+
+    def per_iter(he, k, tname):
+        sel = [r["per_iter_s"] for r in rows
+               if r["he_backend"] == he and r["parties"] == k
+               and r["transport"] == tname and r["glm"] == "logistic"]
+        return sel[0] if sel else None
+
+    def section(he, kset):
+        """Per-backend k-scaling summary: pipelined per-iteration cost
+        at every k against the acceptance bound t_k < k · t_{kmin}."""
+        kmin = min(kset)
+        t0 = per_iter(he, kmin, "pipelined")
+        ratios = {}
+        for k in sorted(kset):
+            tk = per_iter(he, k, "pipelined")
+            if t0 and tk:
+                ratios[str(k)] = round(tk / t0, 2)
+        out = {
+            "k_min": kmin,
+            "per_iter_s_pipelined": {
+                str(k): per_iter(he, k, "pipelined") for k in sorted(kset)},
+            "per_iter_s_local": {
+                str(k): per_iter(he, k, "local") for k in sorted(kset)},
+            "ratio_vs_kmin_pipelined": ratios,
+            # acceptance: concurrent k-party iteration < k × the k=2 cost
+            "sub_k_times_kmin": bool(ratios) and all(
+                v < int(k) for k, v in ratios.items() if int(k) > kmin),
+        }
+        return out
+
+    summary = {"gauge": "mock", "mock": section("mock", ks)}
+    if not smoke:
+        summary["paillier"] = section("paillier", pk)
+        summary["paillier"]["note"] = (
+            "single-host CPU: the HE legs contend for the same cores and "
+            "GIL, so leg concurrency shows as sub-k-linear growth at "
+            "best here; on per-party hardware the legs overlap for real "
+            "(each party computes on its own machine)")
+    return {"schema": "bench_scaling/v1", "ks": list(ks),
+            "glms": list(glms), "rows": rows, "linear_fits": fits,
+            "concurrency": summary,
+            "wall_s": round(time.perf_counter() - t_start, 1)}
+
+
+def write_report(report: dict, out=None) -> pathlib.Path:
+    """Single writer for BENCH_scaling.json (used by both this module's
+    CLI and `benchmarks.run --paper`, so the committed artifact can't
+    drift between the two)."""
+    path = pathlib.Path(out) if out else BENCH_SCALING_PATH
+    path.write_text(json.dumps(report, indent=1) + "\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, mock only, no JSON write (CI)")
+    ap.add_argument("--out", default=str(BENCH_SCALING_PATH))
+    args = ap.parse_args()
+    if args.smoke:
+        report = run(ks=(2, 4), glms=("logistic",), iters=2, batch=64,
+                     n_samples=512, smoke=True)
+    else:
+        report = run()
+    print(json.dumps(report["concurrency"], indent=1))
+    for f in report["linear_fits"]:
+        print(f"# {f['glm']}: slope={f['slope_mb_per_party']} MB/party, "
+              f"max_residual={f['max_residual_mb']} MB")
+    if args.smoke:
+        print(f"# smoke mode: {pathlib.Path(args.out).name} not written")
+        return
+    print(f"# wrote {write_report(report, args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -61,17 +61,25 @@ def bench_fig1(_: bool) -> None:
               + ";".join(f"{v:.4f}" for v in c["tp"]))
 
 
-def bench_fig2(_: bool) -> None:
+def bench_fig2(paper: bool) -> None:
+    """k-scaling rows; full measurement + BENCH_scaling.json come from
+    `python -m benchmarks.fig2_scaling` (or --paper here)."""
     from benchmarks import fig2_scaling
-    rows = fig2_scaling.run()
-    for r in rows:
-        if "parties" in r:
-            _csv(f"fig2.parties{r['parties']}", r["runtime_s"] * 1e6,
-                 f"comm_mb={r['comm_mb']}")
-        else:
-            _csv("fig2.linear_fit", 0.0,
-                 f"slope_mb_per_party={r['slope_mb_per_party']};"
-                 f"max_residual_mb={r['max_residual_mb']}")
+    if paper:
+        report = fig2_scaling.run()
+        print(f"# wrote {fig2_scaling.write_report(report)}")
+    else:
+        report = fig2_scaling.run(ks=(2, 4, 8), glms=("logistic",),
+                                  iters=3, batch=128, n_samples=1000,
+                                  smoke=True)
+    for r in report["rows"]:
+        _csv(f"fig2.{r['glm']}.k{r['parties']}.{r['transport']}",
+             r["per_iter_s"] * 1e6,
+             f"comm_mb={r['comm_mb']};he={r['he_backend']}")
+    for f in report["linear_fits"]:
+        _csv(f"fig2.linear_fit.{f['glm']}", 0.0,
+             f"slope_mb_per_party={f['slope_mb_per_party']};"
+             f"max_residual_mb={f['max_residual_mb']}")
 
 
 def bench_kernels(_: bool, smoke: bool = False) -> None:

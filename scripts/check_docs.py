@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Docs consistency gate (CI):
+
+1. every relative markdown link in docs/*.md and README.md resolves to
+   an existing file;
+2. every repo file path named in backticks in those documents exists;
+3. every message tag named in docs/protocols.md exists in
+   `repro.runtime.messages` (and every tag the runtime defines is
+   documented there) — the paper↔code map must not drift from the code.
+
+Run from anywhere:  python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+DOCS = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+PATH_RE = re.compile(
+    r"`((?:src|scripts|benchmarks|tests|docs|examples)/[\w./-]+\."
+    r"(?:py|md|sh|json|yml))`")
+TAG_RE = re.compile(r"`(P\d\.[a-z_]+|beaver_open|flag|infer\.wx_share)`")
+
+
+def check_links() -> list[str]:
+    errors = []
+    for doc in DOCS:
+        text = doc.read_text()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            resolved = (doc.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"{doc.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+        for m in PATH_RE.finditer(text):
+            if not (REPO / m.group(1)).exists():
+                errors.append(f"{doc.relative_to(REPO)}: named file "
+                              f"missing -> {m.group(1)}")
+    return errors
+
+
+def check_tags() -> list[str]:
+    from repro.runtime import messages
+
+    def subclass_tags(cls):
+        out = set()
+        for sub in cls.__subclasses__():
+            if sub.tag != "?":
+                out.add(sub.tag)
+            out |= subclass_tags(sub)
+        return out
+
+    code_tags = subclass_tags(messages.Message)
+    code_tags |= set(messages.TAG_PROTOCOL)
+    proto_doc = REPO / "docs" / "protocols.md"
+    doc_tags = set(TAG_RE.findall(proto_doc.read_text()))
+    errors = [f"docs/protocols.md names unknown tag `{t}` "
+              f"(not in runtime/messages.py)"
+              for t in sorted(doc_tags - code_tags)]
+    errors += [f"runtime tag `{t}` is undocumented in docs/protocols.md"
+               for t in sorted(set(messages.TAG_PROTOCOL) - doc_tags)]
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_tags()
+    for e in errors:
+        print(f"DOCS-CHECK FAIL: {e}")
+    if not errors:
+        docs = ", ".join(str(d.relative_to(REPO)) for d in DOCS)
+        print(f"docs check ok ({docs})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

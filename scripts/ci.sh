@@ -11,9 +11,17 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # import at seed; this guards the fix).
 python -m pytest -q --collect-only >/dev/null
 
+# Docs consistency gate: markdown cross-references resolve and every
+# message tag named in docs/protocols.md exists in runtime/messages.py.
+python scripts/check_docs.py
+
 # Crypto-kernel drift smoke (CPU, tiny sizes): the kernel microbench
 # must run end-to-end.  Engine bit-exactness parity itself lives in
 # tests/test_engine.py, collected by the tier-1 sweep below.
 python -m benchmarks.run --only kernels --smoke >/dev/null
+
+# k-scaling smoke: the concurrent-leg scheduler must survive the
+# fig2 benchmark path end-to-end (full curves: benchmarks.fig2_scaling).
+python -m benchmarks.fig2_scaling --smoke >/dev/null
 
 exec python -m pytest -x -q "$@"

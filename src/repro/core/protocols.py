@@ -156,7 +156,7 @@ def he_matvec(pub: paillier.PublicKey, cts: jnp.ndarray,
     jnp library — bit-identical either way."""
     eng = engine if engine is not None else engine_mod.get_engine()
     if window <= 1:
-        if eng.uses_kernels:
+        if eng.uses_kernels or eng.sharded:
             bits = fixed_point.int_bits_msb(exps.astype(_U32), width)
             return eng.he_matvec_windowed(cts, bits, pub.mod_n2, 1)
         return _he_matvec_bitserial(_HashablePub(pub), cts,
@@ -166,7 +166,7 @@ def he_matvec(pub: paillier.PublicKey, cts: jnp.ndarray,
     if digits is None or window != DEFAULT_WINDOW \
             or digits.shape[-1] != -(-width // window):
         digits = window_digits(exps.astype(_U32), width, window)
-    if eng.uses_kernels:
+    if eng.uses_kernels or eng.sharded:
         return eng.he_matvec_windowed(cts, digits, pub.mod_n2, window)
     return _he_matvec_windowed(_HashablePub(pub), cts,
                                jnp.asarray(digits, _U32), window)

@@ -18,12 +18,21 @@ so the switch is purely a performance knob: select with the
 ``REPRO_CRYPTO_ENGINE`` env var, `VFLConfig.crypto_engine`, or
 `set_engine`/`use_engine`.  ``auto`` resolves to ``pallas`` on TPU and
 ``jnp`` elsewhere.
+
+Scale-out: give the engine a device ``mesh`` (or construct a
+`distributed.he_sharding.ShardedCryptoEngine`) and every batched op runs
+under `shard_map` with the ciphertext batch axis sharded over
+``mesh.shape[mesh_axis]`` devices — still bit-exact against the
+single-device path (tests/test_he_sharding.py); `shard_batch=False`
+turns the routing off without dropping the mesh.  See
+docs/architecture.md for where the sharded path sits in the stack.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import os
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +47,17 @@ ENV_VAR = "REPRO_CRYPTO_ENGINE"
 
 
 def resolve_backend(name: str | None = None) -> str:
-    """``auto``/None -> env var -> hardware default."""
+    """Resolve a backend name to one of `BACKENDS`.
+
+    Args:
+      name: backend name, ``"auto"``, ``""`` or None.  ``auto``/None/""
+        consults the ``REPRO_CRYPTO_ENGINE`` env var, then the hardware
+        default (``pallas`` on TPU, ``jnp`` elsewhere).
+    Returns:
+      One of ``"jnp" | "pallas-interpret" | "pallas"``.
+    Raises:
+      ValueError: for any other name.
+    """
     if name in (None, "", "auto"):
         name = os.environ.get(ENV_VAR, "auto")
     if name in ("", "auto"):
@@ -52,24 +71,91 @@ def resolve_backend(name: str | None = None) -> str:
 @dataclasses.dataclass(frozen=True)
 class CryptoEngine:
     """Immutable dispatch descriptor (hashable, so it can ride through
-    jit static args)."""
+    jit static args).
+
+    Every op takes and returns *canonical* uint32 limb arrays (radix-2^12
+    limbs, values < the modulus; Montgomery-domain where noted) — the
+    representation `crypto.bigint` defines — so engines with different
+    backends or meshes are interchangeable bit for bit.
+
+    Fields:
+      backend: ``"jnp"`` (library lax loops), ``"pallas-interpret"``
+        (fused kernels, interpret mode) or ``"pallas"`` (fused kernels
+        compiled for TPU).
+      tile_b: batch tile for the montmul / fused-ladder kernels.
+      tile_m: output-column tile for the fused HE matvec kernel.
+      chunk_n: ciphertext-row chunk bounding the matvec power table's
+        VMEM footprint.
+      mesh: optional `jax.sharding.Mesh`; when set (and `shard_batch`),
+        batched ops run under `shard_map` with the ciphertext batch axis
+        sharded over ``mesh.shape[mesh_axis]`` devices
+        (`distributed.he_sharding`).
+      mesh_axis: name of the mesh axis carrying the ciphertext batch.
+      shard_batch: master switch for the sharded routing (lets callers
+        thread a mesh through config without committing to sharding).
+    """
 
     backend: str = "jnp"
     tile_b: int = 128           # montmul / ladder batch tile
     tile_m: int = 128           # he_matvec output-column tile
     chunk_n: int = 512          # he_matvec ciphertext-row chunk (VMEM)
+    mesh: Any = None            # device mesh for ciphertext-batch sharding
+    mesh_axis: str = "data"     # mesh axis the batch shards over
+    shard_batch: bool = True    # route batched ops through he_sharding
 
     @property
     def uses_kernels(self) -> bool:
+        """True when ops go to the fused Pallas kernels (non-jnp)."""
         return self.backend != "jnp"
 
     @property
     def interpret(self) -> bool:
+        """Pallas interpret mode (CPU); False only for backend="pallas"."""
         return self.backend != "pallas"
+
+    @property
+    def sharded(self) -> bool:
+        """True when batched ops run mesh-sharded over `mesh_axis`.
+        Raises a clear ValueError for a mesh without that axis, or with
+        a non-power-of-two axis size (the matvec ⊕-combine is the
+        `modmul_reduce` butterfly, which needs one) — instead of an
+        opaque error mid-protocol."""
+        if self.mesh is None or not self.shard_batch:
+            return False
+        if self.mesh_axis not in self.mesh.shape:
+            raise ValueError(f"engine mesh has no axis {self.mesh_axis!r};"
+                             f" axes are {tuple(self.mesh.shape)}")
+        size = self.mesh.shape[self.mesh_axis]
+        if size & (size - 1):
+            raise ValueError(
+                f"mesh axis {self.mesh_axis!r} has size {size}; the "
+                "sharded ⊕-combine (modmul_reduce butterfly) needs a "
+                "power of two")
+        return size > 1
+
+    def single_device(self) -> "CryptoEngine":
+        """This engine with the mesh dropped — the per-shard inner
+        engine `he_sharding` runs inside each shard_map body."""
+        if self.mesh is None:
+            return self
+        return CryptoEngine(backend=self.backend, tile_b=self.tile_b,
+                            tile_m=self.tile_m, chunk_n=self.chunk_n)
 
     # -- fused hot-path ops -------------------------------------------------
     def mont_mul(self, a: jnp.ndarray, b: jnp.ndarray,
                  mod: Modulus) -> jnp.ndarray:
+        """Batched Montgomery product a ⊙ b mod N.
+
+        Args:
+          a, b: (..., L) canonical Montgomery-domain limb arrays
+            (broadcast against each other over the batch dims).
+          mod: the modulus descriptor (L limbs).
+        Returns:
+          (..., L) canonical Montgomery-domain product.
+        """
+        if self.sharded:
+            from repro.distributed import he_sharding
+            return he_sharding.sharded_mont_mul(self, a, b, mod)
         if not self.uses_kernels:
             return bigint.mont_mul(a, b, mod)
         from repro.kernels import ops
@@ -78,7 +164,21 @@ class CryptoEngine:
 
     def mont_exp_bits(self, base: jnp.ndarray, bits: jnp.ndarray,
                       mod: Modulus) -> jnp.ndarray:
-        """Constant-time ladder; kernel path runs it in ONE pallas_call."""
+        """Constant-time square-and-multiply ladder base^e mod N.
+
+        Args:
+          base: (..., L) Montgomery-domain bases.
+          bits: (..., nbits) MSB-first exponent bits (uint32 0/1;
+            broadcast against base's batch dims — a single shared bit
+            vector is the decrypt-λ pattern).
+          mod: the modulus descriptor.
+        Returns:
+          (..., L) Montgomery-domain base^e, canonical.  The kernel path
+          runs the whole ladder in ONE pallas_call.
+        """
+        if self.sharded:
+            from repro.distributed import he_sharding
+            return he_sharding.sharded_mont_exp_bits(self, base, bits, mod)
         if not self.uses_kernels:
             return bigint.mont_exp_bits(base, bits, mod)
         from repro.kernels import ops
@@ -87,6 +187,9 @@ class CryptoEngine:
 
     def mont_exp_const(self, base: jnp.ndarray, e: int,
                        mod: Modulus) -> jnp.ndarray:
+        """Ladder with a host-constant exponent `e` ≥ 0 (bit decomposition
+        memoized via `bigint.cached_bits`).  Same contract as
+        `mont_exp_bits`; e == 0 short-circuits to mont(1)."""
         if e == 0:
             return jnp.broadcast_to(bigint.mont_one(mod), base.shape)
         bits = jnp.asarray(bigint.cached_bits(int(e), int(e).bit_length()))
@@ -94,9 +197,29 @@ class CryptoEngine:
 
     def he_matvec_windowed(self, cts: jnp.ndarray, digits,
                            mod: Modulus, window: int) -> jnp.ndarray:
-        """Fused windowed matvec (kernel backends only; protocols routes
-        the jnp backend to its library ladders).  digits: (n, m, levels)
-        MSB-first window digits."""
+        """Fixed-window HE matvec: (m, L) ciphertexts of Σ_i exps[i,j]·m_i.
+
+        Args:
+          cts: (n, L) Montgomery-domain ciphertexts mod n².
+          digits: (n, m, levels) MSB-first window digits of the uint32
+            exponents (window=1 → plain MSB-first bits).
+          mod: the ciphertext modulus (n²).
+          window: window width in bits (≥ 1).
+        Returns:
+          (m, L) Montgomery-domain ciphertexts, canonical.
+
+        Kernel backends run the fused kernel; a mesh-sharded engine
+        shards the ciphertext-row axis and ⊕-combines partials across
+        devices.  For the plain jnp single-device engine, callers
+        (`protocols.he_matvec`) route to the jitted library ladders
+        instead — this method is reachable on the jnp backend only via
+        the sharded path, whose shard bodies carry their own library
+        ladder.
+        """
+        if self.sharded:
+            from repro.distributed import he_sharding
+            return he_sharding.sharded_he_matvec(self, cts, digits, mod,
+                                                 window)
         from repro.kernels import ops
         return ops.he_matvec_fused(cts, jnp.asarray(digits, _U32), mod,
                                    window=window, tile_m=self.tile_m,
@@ -105,14 +228,19 @@ class CryptoEngine:
 
     # -- derived conveniences (same dispatch, used by paillier.py) ----------
     def to_mont(self, a: jnp.ndarray, mod: Modulus) -> jnp.ndarray:
+        """Lift canonical residues into the Montgomery domain (⊙ R² )."""
         return self.mont_mul(a, jnp.asarray(mod.r2, _U32), mod)
 
     def from_mont(self, a: jnp.ndarray, mod: Modulus) -> jnp.ndarray:
+        """Drop Montgomery-domain residues back to plain canonical form."""
         one = jnp.zeros(mod.L, _U32).at[0].set(1)
         return self.mont_mul(a, one, mod)
 
 
 def make(name: str | None = None, **kw) -> CryptoEngine:
+    """Build a `CryptoEngine` from a backend name (resolved like
+    `resolve_backend`); extra kwargs (tile sizes, ``mesh=``, …) pass
+    through to the dataclass."""
     return CryptoEngine(backend=resolve_backend(name), **kw)
 
 
@@ -128,7 +256,8 @@ def get_engine() -> CryptoEngine:
 
 
 def set_engine(engine: CryptoEngine | str | None) -> CryptoEngine:
-    """Install the process-default engine; accepts a backend name."""
+    """Install the process-default engine; accepts a backend name
+    (resolved via `make`) or a ready `CryptoEngine`.  Returns it."""
     global _DEFAULT
     _DEFAULT = make(engine) if isinstance(engine, (str, type(None))) \
         else engine
@@ -137,7 +266,8 @@ def set_engine(engine: CryptoEngine | str | None) -> CryptoEngine:
 
 @contextlib.contextmanager
 def use_engine(engine: CryptoEngine | str):
-    """Temporarily switch the process-default engine (tests/benchmarks)."""
+    """Temporarily switch the process-default engine (tests/benchmarks).
+    Yields the installed engine; restores the previous default on exit."""
     global _DEFAULT
     prev = _DEFAULT
     set_engine(engine)

@@ -1,2 +1,4 @@
 """Distribution layer: sharding rules (FSDP×TP×EP×SP), secure collectives,
-gradient compression, elastic resharding."""
+gradient compression, elastic resharding, and the mesh-sharded HE engine
+(`he_sharding.ShardedCryptoEngine` — ciphertext-batch data parallelism
+for the Paillier hot path, bit-exact vs the single-device engine)."""

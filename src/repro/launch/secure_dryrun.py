@@ -9,7 +9,13 @@ feature columns over `model`; the homomorphic ⊕-reduction across sample
 shards is the modmul ppermute ladder (psum can't express it).
 
   PYTHONPATH=src python -m repro.launch.secure_dryrun \
-      [--samples 30720] [--features 32] [--key-bits 1024]
+      [--samples 30720] [--features 32] [--key-bits 1024] \
+      [--mesh 2x16x16]
+
+`--mesh PxDxM` picks the pod×data×model mesh shape (product ≤ the 512
+forced host devices), so the same lowering compiles at laptop scale
+(`--mesh 2x2x4`) or pod scale; the analytic roofline terms follow the
+chosen shape.
 """
 import os
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
@@ -183,10 +189,40 @@ def main() -> None:
                     choices=("jnp", "pallas-interpret", "pallas"),
                     help="crypto compute engine for the Montgomery "
                          "products (jnp keeps the cost model exact)")
+    ap.add_argument("--mesh", default="2x16x16",
+                    help="pod×data×model mesh shape, e.g. 2x16x16 "
+                         "(pod = party; product ≤ 512)")
     ap.add_argument("--out", default="results/secure_dryrun.json")
     args = ap.parse_args()
 
-    mesh = mesh_lib.make_production_mesh(multi_pod=True)
+    try:
+        dims = tuple(int(v) for v in args.mesh.lower().split("x"))
+        assert len(dims) == 3 and all(d >= 1 for d in dims)
+    except (ValueError, AssertionError):
+        raise SystemExit(f"--mesh must be PxDxM (got {args.mesh!r})")
+    n_dev = len(jax.devices())
+    if int(jnp.prod(jnp.asarray(dims))) > n_dev:
+        raise SystemExit(f"--mesh {args.mesh} needs {dims[0]*dims[1]*dims[2]}"
+                         f" devices; only {n_dev} forced host devices")
+    # the shard_map in_specs and the analytic roofline both assume exact
+    # divisibility — fail loudly instead of reporting a zeroed roofline
+    d_sz_, m_sz_ = dims[1], dims[2]
+    pow2_axes = (d_sz_,) if args.shard_mode == "feature" else (d_sz_, m_sz_)
+    if any(s & (s - 1) for s in pow2_axes):
+        raise SystemExit(f"--mesh {args.mesh}: the homomorphic ⊕-ladder "
+                         "(modmul_reduce butterfly) needs power-of-two "
+                         "sample-shard axes (data; also model in "
+                         "sample2d mode)")
+    samp_div = d_sz_ if args.shard_mode == "feature" else d_sz_ * m_sz_
+    if args.samples % samp_div:
+        raise SystemExit(f"--samples {args.samples} must be a multiple of "
+                         f"the sample shard factor {samp_div} (mesh "
+                         f"{args.mesh}, shard-mode {args.shard_mode})")
+    if args.shard_mode == "feature" and args.features % m_sz_:
+        raise SystemExit(f"--features {args.features} must be a multiple "
+                         f"of the model axis size {m_sz_} in feature "
+                         "shard-mode")
+    mesh = mesh_lib._make_mesh(dims, ("pod", "data", "model"))
     # a real key size's modulus shape — value content irrelevant for
     # lowering, but Modulus wants a genuine odd modulus for its constants
     mod = Modulus.make((1 << (2 * args.key_bits)) - 159)
@@ -218,25 +254,27 @@ def main() -> None:
     ma = compiled.memory_analysis()
     ca = xla_cost_analysis(compiled)
     colls = parse_collectives(compiled.as_text())
-    # analytic roofline terms (HLO counts scan bodies once)
+    # analytic roofline terms (HLO counts scan bodies once) — per-device
+    # local sizes follow the chosen mesh shape
+    d_sz, m_sz = mesh.shape["data"], mesh.shape["model"]
     if args.shard_mode == "feature":
-        n_loc, m_loc, ladder = n // 16, max(m // 16, 1), 16
+        n_loc, m_loc, ladder = n // d_sz, max(m // m_sz, 1), d_sz
     else:
-        n_loc, m_loc, ladder = n // 256, m, 256
+        n_loc, m_loc, ladder = n // (d_sz * m_sz), m, d_sz * m_sz
     mm = montmul_count(n_loc, m_loc, args.width, args.window, ladder)
     flops = mm * flops_per_montmul(L2)
     # HBM: ciphertext block re-read per ladder level + exps + outputs
     levels = args.width if args.window <= 1 else -(-args.width
                                                    // args.window)
     hbm = (n_loc * L2 * 4) * levels + n_loc * m_loc * 4
-    coll = m_loc * L2 * 4 * max(16 .bit_length() - 1, 0)  # ⊕-ladder hops
+    coll = m_loc * L2 * 4 * max(d_sz.bit_length() - 1, 0)  # ⊕-ladder hops
     # per-iteration cross-party traffic, synthesized from the same typed
     # Message envelopes the live runtime routes (comm columns + rounds)
     by_tag, rounds = msg_lib.iteration_traffic(
         n_parties=2, nb=n, m_per_party=m, key_bits=args.key_bits)
     res = {
         "kind": "secure_efmvfl_grad_step",
-        "mesh": "2x16x16", "key_bits": args.key_bits,
+        "mesh": args.mesh, "key_bits": args.key_bits,
         "engine": args.engine,
         "samples": n, "features": m, "exp_width": args.width,
         "window": args.window, "shard_mode": args.shard_mode,

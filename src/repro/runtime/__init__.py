@@ -2,8 +2,11 @@
 
 The deployment seam for EFMVFL — protocol code talks to a Transport
 instead of shared local variables, so the same actors run under the
-bit-exact local replay, the pipelined overlap schedule, or (future)
-real multi-host transports.
+bit-exact local replay, the concurrent-leg pipelined schedule
+(`PipelinedTransport`: per-message pool futures via `pump_async`,
+join barrier before Protocol 4), or (future) real multi-host
+transports.  See docs/architecture.md for the layer diagram and
+docs/protocols.md for the paper ↔ code map.
 """
 from repro.runtime import messages
 from repro.runtime.party import CPState, DataParty, LabelParty, Party

@@ -52,7 +52,19 @@ def ciphertext_bytes(n_cts: int, key_bits: int) -> int:
 
 @dataclasses.dataclass
 class Message:
-    """Base envelope: src/dst party names plus an opaque payload."""
+    """Base envelope.
+
+    Fields:
+      src/dst: party names ("C", "B1", …) — the transport's routing keys.
+      payload: the value carried (subclass-specific; None for synthetic
+        traffic that only needs byte accounting).
+      tag: class-level wire tag, the key of all per-tag byte accounting
+        (`CommMeter.by_tag`) and of `TAG_PROTOCOL`.
+
+    `wire_bytes()` returns the serialized size in bytes a real
+    deployment would put on the wire for this envelope's payload
+    (headers excluded — the paper's comm columns count payloads).
+    """
     src: str
     dst: str
     payload: Any = None
@@ -64,8 +76,9 @@ class Message:
 
 @dataclasses.dataclass
 class RingMessage(Message):
-    """Payload is an R64 ring tensor (or None with `n_elems` given —
-    traffic synthesis for dry-runs that never materialize values)."""
+    """Payload is an R64 ring tensor (8 bytes per element on the wire),
+    or None with `n_elems` given — traffic synthesis for dry-runs that
+    never materialize values."""
     n_elems: int | None = None
 
     def wire_bytes(self) -> int:
@@ -77,8 +90,11 @@ class RingMessage(Message):
 
 @dataclasses.dataclass
 class CipherMessage(Message):
-    """Payload is a batch of ciphertexts under `key_owner`'s public key
-    (the mock backend carries ring values but meters identical bytes)."""
+    """Payload is a batch of `n_cts` Paillier ciphertexts under
+    `key_owner`'s public key — on the wire, canonical Z_{n²} elements of
+    2·`key_bits` bits each (in memory, Montgomery-domain uint32 limb
+    arrays; the mock backend carries ring values but meters identical
+    bytes)."""
     n_cts: int = 0
     key_bits: int = 0
     key_owner: str = ""
@@ -88,34 +104,51 @@ class CipherMessage(Message):
 
 
 class ZShare(RingMessage):
+    """Protocol 1 / Alg. 1 line 7 — share of z_p = X_p W_p (R64, f
+    fractional bits), party → one CP."""
     tag = "P1.z_share"
 
 
 class YShare(RingMessage):
+    """Protocol 1 / Alg. 1 line 8 — share of the label Y (R64, f
+    fractional bits), C → one CP."""
     tag = "P1.y_share"
 
 
 class EzShare(RingMessage):
+    """Protocol 1, Poisson/Gamma — share of e^{±z_p} (R64, f fractional
+    bits), party → one CP."""
     tag = "P1.ez_share"
 
 
 class BeaverOpen(RingMessage):
+    """Beaver multiplication (Protocols 2/4) — the masked openings
+    d = x−a, e = y−b one CP sends the other (2 R64 elements per product
+    element; accounted by `scheduler.TransportDealer`)."""
     tag = "beaver_open"
 
 
 class UnmaskedShare(RingMessage):
+    """Protocol 3 line 7 — the decrypted, offset-corrected gradient term
+    (R64, fx+f fractional bits), key owner → feature owner."""
     tag = "P3.unmasked_share"
 
 
 class LossShare(RingMessage):
+    """Protocol 4 — scalar loss share (R64, f fractional bits),
+    CP₁ → CP₀, then the reconstructed sum CP₀ → C."""
     tag = "P4.loss_share"
 
 
 class WxShare(RingMessage):
+    """Serving path — local score share X_p W_p (float64, 8 B/row),
+    party → C."""
     tag = "infer.wx_share"
 
 
 class EncD(CipherMessage):
+    """Protocol 3 line 1 — [[⟨d⟩]] (nb ciphertexts under the sender's
+    own key), CP ↔ CP exchange."""
     tag = "P3.enc_d"
 
     @staticmethod
@@ -129,10 +162,15 @@ class EncD(CipherMessage):
 
 
 class EncDBroadcast(CipherMessage):
+    """Alg. 1 line 17 — the same [[⟨d⟩]] ciphertext batch, CP → each
+    non-CP (payload shared with the `EncD` exchange; metered per
+    recipient, as a real broadcast would be)."""
     tag = "P3.enc_d_bcast"
 
 
 class MaskedGrad(CipherMessage):
+    """Protocol 3 lines 5–6 — the masked encrypted gradient (m_p
+    ciphertexts under `key_owner`'s key), feature owner → key owner."""
     tag = "P3.masked_grad"
 
     @staticmethod

@@ -18,6 +18,21 @@ the Beaver-multiplication legs of Protocol 4) are evaluated in-process
 by the scheduler over the pair's states, exactly like `mpc.beaver`; the
 openings they would exchange are accounted as `beaver_open` messages by
 the transport's dealer.
+
+Threading note: actors are not internally synchronized.  Concurrent
+transports (`PipelinedTransport.pump_async`) serialize each actor's
+`handle` calls with a per-party delivery lock, so an actor only ever
+needs to be safe against *other* actors running concurrently — which it
+is by construction, since actors share no mutable state (the shared
+protocol RNG is lock-wrapped by the transport, and the HE backend's
+noise pool is internally locked).
+
+Value conventions used below (see docs/protocols.md for the full map):
+ring shares are `crypto.ring.R64` tensors (exact Z_2^64, fixed-point
+with `cfg.f` fractional bits unless noted); ciphertexts are
+Montgomery-domain mod-n² uint32 limb arrays of shape (batch, L2) under a
+named party's Paillier key (the mock backend carries R64 instead);
+weights and features are host float64.
 """
 from __future__ import annotations
 
@@ -90,7 +105,23 @@ class CPRole:
 
 
 class Party(CPRole):
-    """One EFMVFL participant (B_k); subclassed by LabelParty for C."""
+    """One EFMVFL participant (B_k); subclassed by LabelParty for C.
+
+    Args:
+      name: wire identity ("C", "B1", …) — message routing key.
+      X: (n, m_p) float64 local features; encoded once into protocol
+        form (`EncodedFeatures`: offset-lifted fixed-point exponents +
+        precomputed window digits).
+      cfg: `VFLConfig` (fixed-point widths fx/f, exp_width, lr, …).
+      backend: HE backend view (`PaillierBackend`/`MockHEBackend`) — in
+        a real deployment, the party's own keypair plus peers' public
+        keys.
+      rng: shared protocol entropy source (Protocol-3 masks); lock-
+        wrapped by concurrent transports.
+
+    Public state: `W` (m_p,) float64 head weights (never leave the
+    party); `stop` — C's latest flag.
+    """
 
     def __init__(self, name: str, X: np.ndarray, cfg, backend, rng):
         self.name = name
@@ -117,6 +148,11 @@ class Party(CPRole):
     # -- iteration lifecycle ------------------------------------------------
     def begin_iteration(self, idx, cps: tuple[str, str], nb: int,
                         mask_bound: int) -> None:
+        """Reset per-iteration scratch for batch `idx` (host int array of
+        row indices, len nb): slice features, compute the local linear
+        predictor X[idx] @ W (float64), activate `CPRole` iff this party
+        is in `cps`, and record `mask_bound` (bits — see
+        `scheduler.mask_bound_bits`) for the Protocol-3 masks."""
         self._idx = idx
         self._cps = cps
         self._nb = nb
@@ -136,12 +172,25 @@ class Party(CPRole):
 
     # -- Protocol 1 ---------------------------------------------------------
     def share_z(self, key) -> list[msg.Message]:
+        """Protocol 1 / Alg. 1 line 7: 2-out-of-2 share the local linear
+        predictor z_p = X_p W_p.
+
+        Args:
+          key: jax PRNG key for the share split (scheduler's key ladder,
+            so the randomness stream is transport-independent).
+        Returns:
+          Two `P1.z_share` messages (R64, f fractional bits), one per CP.
+        """
         val = fixed_point.encode(self._wx, self.cfg.f)
         s0, s1 = sharing.share(val, key)
         return [msg.ZShare(self.name, self._cps[0], s0),
                 msg.ZShare(self.name, self._cps[1], s1)]
 
     def share_ez(self, key, exp_sign: int) -> list[msg.Message]:
+        """Protocol 1, Poisson/Gamma leg: share e^{exp_sign · z_p}
+        (exp_sign = GLM.exp_sign: +1 Poisson, −1 Gamma; input clipped to
+        [−30, 8] before exp).  Returns two `P1.ez_share` messages (R64,
+        f fractional bits)."""
         ezp = np.exp(np.clip(exp_sign * self._wx, -30, 8))
         s0, s1 = sharing.share(fixed_point.encode(ezp, self.cfg.f), key)
         return [msg.EzShare(self.name, self._cps[0], s0),
@@ -149,6 +198,10 @@ class Party(CPRole):
 
     # -- message dispatch ---------------------------------------------------
     def handle(self, m: msg.Message) -> list[msg.Message]:
+        """Single actor step: absorb one envelope, return the envelopes
+        it triggers (possibly none).  The transport owns delivery order,
+        metering, and (for concurrent transports) per-party locking —
+        `handle` itself assumes it is never re-entered."""
         if isinstance(m, (msg.ZShare, msg.YShare, msg.EzShare)):
             self.accumulate_share(m)
             return []

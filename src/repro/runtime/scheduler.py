@@ -15,10 +15,18 @@ parties would exchange accounted through the transport's dealer.
 With `LocalTransport` this replays the pre-refactor `train_vfl`
 simulation bit-for-bit (losses, weights, per-tag meter bytes — see
 tests/test_runtime_parity.py); `PipelinedTransport` overlaps the
-data-independent Protocol-3 legs.
+data-independent Protocol-3 legs, and with its `concurrent_legs`
+default the scheduler dispatches each party's Protocol-1 share
+computation and every Protocol-3 masked-matvec/decrypt leg as an
+independent pool future (join barrier before Protocol 4), keeping the
+latency-step count flat in the party count k and per-iteration
+wall-clock below k× the k=2 cost (gauged in BENCH_scaling.json via
+benchmarks/fig2_scaling.py; on a single shared CPU host the legs
+contend for cores, so absolute speedup needs per-party hardware).
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Sequence
 
@@ -53,21 +61,60 @@ class TransportDealer:
 
 
 def mask_bound_bits(cfg) -> int:
-    """v ≤ n·2^width·2^64 → statistical-hiding mask bound."""
+    """Bit bound on the Protocol-3 pre-mask value (paper §4.3).
+
+    The value a feature owner masks is  v = Σ_i exps[i,j]·⟨d⟩_i  over
+    the batch: each offset-lifted exponent is < 2^exp_width, each ring
+    share < 2^64, and the sum has ⌈log2 batch_size⌉ carry bits plus one
+    slack bit.  Masks are then drawn uniformly from
+    [0, 2^(bound + STAT_SEC)), giving 2^-STAT_SEC statistical hiding.
+
+    Args:
+      cfg: `VFLConfig` (uses `exp_width`, `batch_size`).
+    Returns:
+      The bound in bits (an upper bound on ⌈log2 v⌉).
+    """
     return 64 + cfg.exp_width + int(np.ceil(np.log2(cfg.batch_size))) + 1
 
 
 def validate_key_bits(cfg, bound: int) -> None:
-    """Both backends must satisfy the Paillier plaintext-capacity bound:
+    """Check the Paillier plaintext-capacity bound
+    key_bits ≥ bound + STAT_SEC + 2 (masked value + mask must stay < n
+    so mod-2^64 share recovery is exact).  Enforced for BOTH backends:
     a mock run whose key couldn't carry its own masked values would
-    report wire bytes a real deployment can't achieve."""
+    report wire bytes a real deployment can't achieve.
+
+    Args:
+      cfg: `VFLConfig` (uses `key_bits`).
+      bound: the `mask_bound_bits(cfg)` result.
+    Raises:
+      ValueError: when the key is too small.
+    """
     need = bound + protocols.STAT_SEC + 2
     if cfg.key_bits < need:
         raise ValueError(f"key_bits={cfg.key_bits} too small; need >= {need}")
 
 
 class VFLScheduler:
-    """Drives Algorithm 1 over Party actors.  `party_data[0]` must be C."""
+    """Drives Algorithm 1 over Party actors.
+
+    Args:
+      party_data: sequence of `PartyData`-shaped objects (`.name`,
+        `.X` (n, m_p) float features); `party_data[0]` must be C, the
+        label holder.
+      y: (n,) float labels, held only by C's actor.
+      cfg: `core.trainer.VFLConfig` (GLM family, fixed-point widths,
+        HE backend, CP-selection mode, seeds).
+      backend: optional HE backend (`protocols.PaillierBackend` /
+        `MockHEBackend`); built from `cfg` when None.
+      transport: optional `Transport`; `LocalTransport` (bit-exact seed
+        replay) when None.  A transport exposing an `executor` and
+        `concurrent_legs` gets the fan-out schedule: Protocol-1 share
+        computations and Protocol-3 legs as independent pool futures.
+
+    `run()` returns a `core.trainer.TrainResult` (weights per party,
+    public loss trace, byte meter, round count).
+    """
 
     def __init__(self, party_data: Sequence, y: np.ndarray, cfg,
                  backend=None, transport: Transport | None = None):
@@ -107,6 +154,20 @@ class VFLScheduler:
     def label_party(self) -> LabelParty:
         return self.parties[0]
 
+    def _fanout(self, thunks):
+        """Evaluate independent protocol legs: as pool futures when the
+        transport supports concurrent legs, inline otherwise.  Results
+        come back in thunk order either way, so everything downstream
+        (post order, hence delivery order and the CPs' order-sensitive
+        ez chaining) is schedule-independent — the single place that
+        keeps the concurrent and sequential schedules bit-identical."""
+        ex = self.transport.executor
+        if ex is not None and getattr(self.transport, "concurrent_legs",
+                                      False):
+            futs = [ex.submit(t) for t in thunks]
+            return [f.result() for f in futs]
+        return [t() for t in thunks]
+
     def _prefetch_noise(self, cps: tuple[str, str], nb: int) -> None:
         """Schedule this iteration's encryption noise (r^n modexps —
         data-independent) on the transport's pool before Protocol 1 runs,
@@ -144,20 +205,33 @@ class VFLScheduler:
         for p in self.parties:
             p.begin_iteration(idx, cps, nb, self.mask_bound)
         cp0, cp1 = self.by_name[cps[0]], self.by_name[cps[1]]
+        ex = tp.executor
+        concurrent = ex is not None and getattr(tp, "concurrent_legs", False)
         if tp.overlaps_p3:
             self._prefetch_noise(cps, nb)
 
         # -- Protocol 1: share intermediate results -------------------------
-        for i, p in enumerate(self.parties):
-            tp.post_all(p.share_z(subkeys[i]))
-        tp.post_all(self.label_party.share_y(subkeys[len(self.names)]))
+        # Each party's share computation (local matvec + encode + split) is
+        # independent, so _fanout runs them on the pool when the transport
+        # allows; results are POSTED in party order either way, keeping
+        # delivery — and hence the CPs' order-sensitive ez chaining —
+        # deterministic.
+        for out in self._fanout(
+                [functools.partial(p.share_z, subkeys[i])
+                 for i, p in enumerate(self.parties)]
+                + [functools.partial(self.label_party.share_y,
+                                     subkeys[len(self.names)])]):
+            tp.post_all(out)
         tp.pump(order=list(cps))
         mdealer = TransportDealer(self.dealer, tp, cps[0], cps[1])
         ez = None
         if self.model.needs_exp:
-            for i, p in enumerate(self.parties):
-                tp.post_all(p.share_ez(subkeys[len(self.names) + 1 + i],
-                                       self.model.exp_sign))
+            for out in self._fanout(
+                    [functools.partial(p.share_ez,
+                                       subkeys[len(self.names) + 1 + i],
+                                       self.model.exp_sign)
+                     for i, p in enumerate(self.parties)]):
+                tp.post_all(out)
             tp.pump(order=list(cps))
             # e^{Σz_p} = Π e^{z_p}: chained Beaver products over the pair
             e0, e1 = cp0.cp.ez_list, cp1.cp.ez_list
@@ -176,10 +250,24 @@ class VFLScheduler:
         cp0.cp.d_self, cp1.cp.d_self = d0, d1
 
         # -- Protocol 3: secure gradients -----------------------------------
-        tp.post(cp0.announce_enc_d())
-        tp.post(cp1.announce_enc_d())
-        if tp.overlaps_p3:
-            # broadcasts are data-independent of the CP exchange: same sweep
+        # The two CPs' encrypt legs fan out on the pool when possible.
+        enc0, enc1 = self._fanout([cp0.announce_enc_d, cp1.announce_enc_d])
+        tp.post(enc0)
+        tp.post(enc1)
+        if concurrent:
+            # Concurrent legs: every masked-matvec / decrypt / unmask
+            # leg of all k parties becomes an independent pool future
+            # (pump_async) — the k−2 non-CP legs overlap instead of
+            # queueing.  pump_async's return is the join barrier before
+            # Protocol 4; the ring accumulations it races commute
+            # exactly, so the trained model is bit-identical to the
+            # sequential schedule (tests/test_runtime_parity.py, k=8).
+            for cp in (cp0, cp1):
+                tp.post_all(cp.broadcast_enc_d(noncps))
+            tp.pump_async(order=[*cps, *noncps])
+        elif tp.overlaps_p3:
+            # broadcasts are data-independent of the CP exchange:
+            # same sweep
             for cp in (cp0, cp1):
                 tp.post_all(cp.broadcast_enc_d(noncps))
             tp.pump(order=[*cps, *noncps])

@@ -17,8 +17,13 @@ paper's comm-rounds columns) for free.
   broadcasts enter the same sweep (they only depend on the Protocol-2
   output d), and each sweep's per-party handler work runs on a thread
   pool, so the two CPs' HE matvecs overlap the non-CP matvecs on real
-  hardware.  Masks are drawn behind a lock and cancel exactly, so the
-  trained model is bit-identical to LocalTransport under fixed CP
+  hardware.  With `concurrent_legs` (default), the scheduler upgrades
+  the sweep to `pump_async`: every message becomes its own pool future
+  the moment it is visible — no per-sweep barrier — so all k−2 non-CP
+  masked-matvec legs and both CP decrypt legs run as independent
+  futures, joined only once the network is quiet (the barrier before
+  Protocol 4).  Masks are drawn behind a lock and cancel exactly, so
+  the trained model is bit-identical to LocalTransport under fixed CP
   selection; CP *selection* uses a dedicated stream so the trajectory
   stays deterministic regardless of thread interleaving.
 """
@@ -26,7 +31,7 @@ from __future__ import annotations
 
 import collections
 import threading
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 
 import numpy as np
 
@@ -56,12 +61,23 @@ class LockedRNG:
 
 
 class Transport:
-    """Base: metering + FIFO inboxes + sweep-based delivery."""
+    """Base: metering + FIFO inboxes + sweep-based delivery.
+
+    Subclasses choose the execution model only — message metering
+    (`wire_bytes()` at `post`) and round counting are shared, so every
+    transport reports identical per-tag byte totals for the same
+    protocol run.
+    """
 
     #: whether the Protocol-3 CP exchange and non-CP broadcasts may share
     #: a sweep (they are data-independent; the local replay keeps them
     #: serial to match the seed trainer's draw order).
     overlaps_p3 = False
+
+    #: whether the scheduler may dispatch protocol legs as independent
+    #: pool futures (per-message delivery via `pump_async`, no per-sweep
+    #: barrier).  Requires `executor`.
+    concurrent_legs = False
 
     #: background executor for data-independent precompute (the Paillier
     #: noise pool).  None = fully synchronous transport.
@@ -73,10 +89,15 @@ class Transport:
         self._inbox: dict[str, collections.deque] = collections.defaultdict(
             collections.deque)
         self._parties: dict[str, object] = {}
+        self._locks: dict[str, threading.Lock] = {}
 
     # -- wiring -------------------------------------------------------------
     def bind(self, parties) -> None:
+        """Register the actors; messages route by `Party.name`.  Also
+        pre-creates one delivery lock per party (concurrent transports
+        serialize each actor's `handle` calls with it)."""
         self._parties = {p.name: p for p in parties}
+        self._locks = {p.name: threading.Lock() for p in parties}
 
     def wrap_rng(self, rng: np.random.Generator):
         """Hook: make the shared protocol generator safe for this
@@ -138,18 +159,35 @@ class Transport:
 
 class LocalTransport(Transport):
     """Sequential in-process delivery; replays the seed simulation
-    bit-for-bit (losses, weights, and per-tag meter bytes)."""
+    bit-for-bit (losses, weights, and per-tag meter bytes).  No
+    executor, so the scheduler runs every protocol leg inline — this is
+    the 'sequential' baseline the concurrent schedules are verified
+    against."""
 
 
 class PipelinedTransport(Transport):
-    """Thread-pooled sweeps + merged Protocol-3 send phase."""
+    """Thread-pooled sweeps + merged Protocol-3 send phase + per-message
+    concurrent delivery (`pump_async`).
+
+    Args:
+      meter: byte accounting sink (fresh `CommMeter` if None).
+      max_workers: thread-pool size (default 8; bound it to the host's
+        useful parallelism — each worker runs whole HE matvec/decrypt
+        legs).
+      concurrent_legs: allow the scheduler to use `pump_async` for the
+        Protocol-3 legs (False falls back to barrier sweeps — kept as a
+        comparison/debug knob; model output is bit-identical either
+        way).
+    """
 
     overlaps_p3 = True
 
     def __init__(self, meter: CommMeter | None = None,
-                 max_workers: int | None = None):
+                 max_workers: int | None = None,
+                 concurrent_legs: bool = True):
         super().__init__(meter)
         self._pool = ThreadPoolExecutor(max_workers=max_workers or 8)
+        self.concurrent_legs = concurrent_legs
 
     @property
     def executor(self):
@@ -172,3 +210,46 @@ class PipelinedTransport(Transport):
                 for name, count in snapshot]
         for f in futs:
             self.post_all(f.result())
+
+    # -- per-message concurrent delivery ------------------------------------
+    def _handle_locked(self, m: Message) -> list[Message]:
+        """Deliver one message under the recipient's lock (each actor
+        stays effectively single-threaded; different actors' legs run
+        concurrently)."""
+        with self._locks[m.dst]:
+            return self._parties[m.dst].handle(m) or []
+
+    def pump_async(self, order: list[str] | None = None) -> None:
+        """Event-driven drain: every queued message is submitted to the
+        pool as its own future the moment it is visible, and a handler's
+        outputs are submitted immediately — no per-sweep barrier, so a
+        fast party's next leg never waits for a slow party's current
+        one.  Returns only when the network is quiet: this return IS the
+        join barrier the scheduler needs before Protocol 4.
+
+        `rounds` grows by the longest message dependency chain (the
+        number of latency steps a real network would pay), matching what
+        `pump` counts for the same traffic.  `order` is accepted for
+        signature parity with `pump`; delivery order is nondeterministic
+        by design, so callers must only drain order-insensitive phases
+        (Protocol 3's ring-share accumulations commute exactly).
+        """
+        seed: list[Message] = []
+        names = list(order or [])
+        names += [n for n in self._parties if n not in names]
+        for n in names:
+            q = self._inbox[n]
+            while q:
+                seed.append(q.popleft())
+        futs = {self._pool.submit(self._handle_locked, m): 1 for m in seed}
+        max_gen = 1 if futs else 0
+        while futs:
+            done, _ = wait(set(futs), return_when=FIRST_COMPLETED)
+            for f in done:
+                gen = futs.pop(f)
+                for m in f.result():
+                    if m.src != m.dst:
+                        self.account(m)
+                    futs[self._pool.submit(self._handle_locked, m)] = gen + 1
+                    max_gen = max(max_gen, gen + 1)
+        self.rounds += max_gen

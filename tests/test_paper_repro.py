@@ -5,14 +5,22 @@ import pytest
 
 
 def test_fig2_comm_linear_in_parties():
-    """Paper Fig 2 (lower): communication grows linearly with parties."""
+    """Paper Fig 2 (lower): communication grows linearly with parties,
+    and the concurrent-leg transport meters the identical bytes."""
     from benchmarks import fig2_scaling
-    rows = fig2_scaling.run(max_parties=5, iters=4)
-    fit = rows[-1]
-    comm = [r["comm_mb"] for r in rows if "parties" in r]
+    report = fig2_scaling.run(ks=(2, 3, 4, 5), glms=("logistic",),
+                              iters=4, batch=512, n_samples=2000,
+                              smoke=True)
+    fit = report["linear_fits"][0]
+    rows = report["rows"]
+    comm = [r["comm_mb"] for r in rows if r["transport"] == "pipelined"]
     assert fit["slope_mb_per_party"] > 0
     assert fit["max_residual_mb"] < 0.05 * max(comm), \
         "comm growth should be ~linear (paper Fig 2)"
+    for k in (2, 3, 4, 5):
+        by_tp = {r["transport"]: r["comm_mb"] for r in rows
+                 if r["parties"] == k}
+        assert by_tp["pipelined"] == by_tp["local"]
 
 
 def test_fig1_losses_match_centralized():

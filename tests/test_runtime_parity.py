@@ -253,6 +253,53 @@ def test_pipelined_transport_equivalent_and_fewer_rounds():
     assert piped.rounds < local.rounds
 
 
+def test_concurrent_legs_parity_k8():
+    """Tentpole invariant at k=8: the concurrent-leg schedule (every
+    Protocol-1 share computation and Protocol-3 masked-matvec/decrypt
+    leg an independent pool future, join barrier before Protocol 4) is
+    bit-identical to the sequential LocalTransport run — losses, final
+    weights, per-tag byte totals — and to the barrier-sweep pipelined
+    schedule it supersedes."""
+    X, y = synthetic.credit_default(n=600, d=24, seed=21)
+    cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=3, batch_size=128,
+                    he_backend="mock", tol=0.0, seed=13)
+    parties = _make_parties(X, 8)
+    seq = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    conc = trainer.train_vfl(
+        parties, y, cfg, transport=PipelinedTransport())
+    sweep = trainer.train_vfl(
+        parties, y, cfg,
+        transport=PipelinedTransport(concurrent_legs=False))
+    for res in (conc, sweep):
+        assert res.losses == seq.losses
+        for name in seq.weights:
+            np.testing.assert_array_equal(res.weights[name],
+                                          seq.weights[name])
+        assert dict(res.meter.by_tag) == dict(seq.meter.by_tag)
+        assert res.rounds < seq.rounds
+    # the async drain must not change the round (latency-step) count of
+    # the merged Protocol-3 phase
+    assert conc.rounds == sweep.rounds
+
+
+@pytest.mark.slow
+def test_concurrent_legs_parity_k8_poisson_paillier():
+    """Same invariant under the order-sensitive ez chaining (Poisson)
+    and a real Paillier backend with the noise pool active."""
+    X, y = synthetic.dvisits(n=120, seed=19)
+    cfg = VFLConfig(glm="poisson", lr=0.05, max_iter=2, batch_size=32,
+                    he_backend="paillier", key_bits=192, tol=0.0, seed=17)
+    parties = _make_parties(X, 8)
+    seq = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    conc = trainer.train_vfl(parties, y, cfg,
+                             transport=PipelinedTransport())
+    assert conc.losses == seq.losses
+    for name in seq.weights:
+        np.testing.assert_array_equal(conc.weights[name],
+                                      seq.weights[name])
+    assert dict(conc.meter.by_tag) == dict(seq.meter.by_tag)
+
+
 def test_pipelined_random_cp_deterministic():
     """Thread interleaving must not shift the CP-selection trajectory."""
     X, y = synthetic.credit_default(n=300, d=8, seed=2)
