@@ -19,6 +19,7 @@ import time
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 BENCH_CRYPTO_PATH = REPO_ROOT / "BENCH_crypto.json"
+BENCH_WIRE_PATH = REPO_ROOT / "BENCH_wire.json"
 
 
 def _csv(name: str, us: float, derived: str = "") -> None:
@@ -108,6 +109,29 @@ def bench_kernels(_: bool, smoke: bool = False) -> None:
     print(f"# wrote {BENCH_CRYPTO_PATH}")
 
 
+def bench_wire(_: bool, smoke: bool = False) -> None:
+    """Codec throughput (encode/decode of the training frame classes);
+    full mode writes BENCH_wire.json."""
+    import jax
+
+    from benchmarks import wire_bench
+    rows = wire_bench.run(smoke=smoke)
+    for r in rows:
+        _csv(r["name"], r["us"], r["derived"])
+    if smoke:
+        print(f"# smoke mode: {BENCH_WIRE_PATH.name} not written")
+        return
+    report = {
+        "schema": "bench_wire/v1",
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "rows": [{k: v for k, v in r.items() if k != "derived"}
+                 for r in rows],
+    }
+    BENCH_WIRE_PATH.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"# wrote {BENCH_WIRE_PATH}")
+
+
 def bench_roofline(_: bool) -> None:
     from benchmarks import roofline
     rows = roofline.run()
@@ -132,6 +156,7 @@ BENCHES = {
     "fig1_losses": bench_fig1,
     "fig2_scaling": bench_fig2,
     "kernels": bench_kernels,
+    "wire": bench_wire,
     "roofline": bench_roofline,
 }
 
@@ -149,7 +174,7 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         try:
-            if name == "kernels":
+            if name in ("kernels", "wire"):
                 fn(args.paper, smoke=args.smoke)
             else:
                 fn(args.paper)

@@ -1,0 +1,88 @@
+"""Codec throughput microbench: encode/decode rates of the wire formats.
+
+Rows cover the hot frame classes of a training iteration: ring-share
+frames (8-byte LE elements), mock ciphertext frames (canonical-width
+padding), and real Paillier ciphertext frames (Montgomery → canonical
+→ Montgomery, the expensive direction).  `benchmarks.run --only wire`
+prints CSV rows and (full mode) writes `BENCH_wire.json`.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.crypto import fixed_point, paillier, ring
+from repro.runtime import messages as msg
+from repro.runtime.codec import Codec
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                       # warm-up / trace
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _row(name: str, us: float, payload_bytes: int, reps: int) -> dict:
+    return {
+        "name": name,
+        "us": round(us, 1),
+        "payload_bytes": payload_bytes,
+        "mb_per_s": round(payload_bytes / max(us, 1e-9), 1),
+        "reps": reps,
+        "derived": f"payload_b={payload_bytes};"
+                   f"mbps={payload_bytes / max(us, 1e-9):.1f}",
+    }
+
+
+def run(smoke: bool = False) -> list[dict]:
+    rng = np.random.default_rng(0)
+    nb = 128 if smoke else 2048
+    m = 8 if smoke else 64
+    key_bits = 192 if smoke else 256
+    reps = 3 if smoke else 20
+    rows: list[dict] = []
+    codec = Codec()
+
+    # -- ring share frames (Protocol 1 / Beaver openings) -----------------
+    v = ring.from_numpy_u64(rng.integers(0, 1 << 64, nb, dtype=np.uint64))
+    m_ring = msg.ZShare("B1", "C", v)
+    frame = codec.encode(m_ring)
+    rows.append(_row(f"wire.ring_encode.n{nb}",
+                     _time(lambda: codec.encode(m_ring), reps),
+                     int(m_ring.wire_bytes()), reps))
+    rows.append(_row(f"wire.ring_decode.n{nb}",
+                     _time(lambda: codec.decode(frame), reps),
+                     int(m_ring.wire_bytes()), reps))
+
+    # -- mock ciphertext frames (canonical-width padding) -----------------
+    m_mock = msg.EncD("C", "B1", v, n_cts=nb, key_bits=key_bits,
+                      key_owner="C")
+    frame = codec.encode(m_mock)
+    rows.append(_row(f"wire.mock_ct_encode.n{nb}.k{key_bits}",
+                     _time(lambda: codec.encode(m_mock), reps),
+                     int(m_mock.wire_bytes()), reps))
+    rows.append(_row(f"wire.mock_ct_decode.n{nb}.k{key_bits}",
+                     _time(lambda: codec.decode(frame), reps),
+                     int(m_mock.wire_bytes()), reps))
+
+    # -- real Paillier ciphertext frames ----------------------------------
+    key = paillier.keygen(key_bits, seed=7)
+    pub = key.pub
+    vals = ring.from_numpy_u64(rng.integers(0, 1 << 64, m, dtype=np.uint64))
+    cts = paillier.encrypt(pub, fixed_point.r64_to_limbs(vals, pub.Ln),
+                           rng=rng)
+    pcodec = Codec(lambda owner: pub.mod_n2)
+    m_ct = msg.MaskedGrad("B1", "C", cts, n_cts=m, key_bits=key_bits,
+                          key_owner="C")
+    frame = pcodec.encode(m_ct)
+    ct_reps = max(2, reps // 4)
+    rows.append(_row(f"wire.paillier_ct_encode.n{m}.k{key_bits}",
+                     _time(lambda: pcodec.encode(m_ct), ct_reps),
+                     int(m_ct.wire_bytes()), ct_reps))
+    rows.append(_row(f"wire.paillier_ct_decode.n{m}.k{key_bits}",
+                     _time(lambda: pcodec.decode(frame), ct_reps),
+                     int(m_ct.wire_bytes()), ct_reps))
+    return rows

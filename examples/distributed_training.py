@@ -1,0 +1,100 @@
+"""EFMVFL across real OS processes: k parties on localhost TCP.
+
+Spawns one process per party (`runtime.netparty.PartyServer`) plus a
+conductor, trains a logistic AND a Poisson GLM over `SocketTransport`,
+and verifies against the single-process `LocalTransport` run that the
+wire changes nothing:
+
+  * losses and final weights bit-identical,
+  * per-tag analytic comm bytes identical,
+  * measured on-the-wire payload bytes equal to the analytic
+    `wire_bytes()` accounting for every tag.
+
+Then it scores a batch through the same socket path (each party ships
+its local score share `infer.wx_share` to C over the mesh).
+
+  PYTHONPATH=src python examples/distributed_training.py [--smoke]
+      [--parties 3] [--he mock|paillier] [--key-bits 256]
+
+The default mock HE backend keeps the demo quick while metering the
+exact ciphertext byte counts a real key would; pass `--he paillier`
+for real keys (each party process generates and keeps its own private
+key — peers only ever learn the public modulus from the handshake).
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import glm as glm_lib
+from repro.core import trainer
+from repro.core.trainer import PartyData, VFLConfig
+from repro.data import synthetic, vertical
+from repro.launch.cluster import SocketCluster
+from repro.runtime import LocalTransport
+from repro.runtime.messages import TAG_PROTOCOL
+
+
+def run_one(glm: str, args) -> None:
+    n = 160 if args.smoke else 400
+    iters = 2 if args.smoke else 4
+    if glm == "poisson":
+        X, y = synthetic.dvisits(n=n, seed=7)
+    else:
+        X, y = synthetic.credit_default(n=n, d=12, seed=3)
+    parts = vertical.split_columns(X, args.parties)
+    names = ["C"] + [f"B{i}" for i in range(1, args.parties)]
+    parties = [PartyData(nm, p) for nm, p in zip(names, parts)]
+    cfg = VFLConfig(glm=glm, lr=0.1, max_iter=iters,
+                    batch_size=min(64, n // 2), he_backend=args.he,
+                    key_bits=args.key_bits, tol=0.0, seed=11)
+
+    local = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    print(f"\n=== {glm}: {args.parties} real processes over TCP "
+          f"({args.he} backend) ===")
+    with SocketCluster(parties, y, cfg) as cluster:
+        res = cluster.train()
+        # -- the wire must change nothing --------------------------------
+        assert res.losses == local.losses, "loss trace diverged"
+        for nm in local.weights:
+            np.testing.assert_array_equal(res.weights[nm],
+                                          local.weights[nm])
+        assert dict(res.meter.by_tag) == dict(local.meter.by_tag)
+        assert dict(res.measured_meter.by_tag) == dict(res.meter.by_tag)
+        print(f"bit-identical to LocalTransport over {res.n_iter} "
+              f"iterations: losses {[round(v, 4) for v in res.losses]}")
+        print(f"wall clock {res.runtime_s:.2f}s "
+              f"(includes {args.parties} process spawns + handshake)")
+        print("per-tag wire traffic (measured == analytic, asserted):")
+        for tag, nbytes in sorted(res.meter.by_tag.items()):
+            measured = res.measured_meter.by_tag[tag]
+            print(f"  {tag:18s} {measured:>9d} B   {TAG_PROTOCOL[tag]}")
+        print(f"frame overhead (preludes + headers, not protocol bytes): "
+              f"{res.wire_overhead_bytes} B")
+
+        # -- serving over the same wire ----------------------------------
+        rows = {p.name: p.X[:8] for p in parties}
+        preds = cluster.score(rows)
+    wx = sum(p.X[:8] @ local.weights[p.name] for p in parties)
+    np.testing.assert_allclose(preds, glm_lib.GLMS[glm].predict(wx))
+    print(f"scored 8 rows over the socket path; first 4: "
+          f"{np.round(preds[:4], 4)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=3,
+                    help="number of party processes (>= 3 exercises the "
+                         "CP broadcast legs)")
+    ap.add_argument("--he", default="mock", choices=("mock", "paillier"))
+    ap.add_argument("--key-bits", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI wire smoke)")
+    args = ap.parse_args()
+    for glm in ("logistic", "poisson"):
+        run_one(glm, args)
+    print("\ndistributed training OK: both GLMs bit-identical to the "
+          "single-process runtime, measured bytes == analytic accounting")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,4 +24,13 @@ python -m benchmarks.run --only kernels --smoke >/dev/null
 # fig2 benchmark path end-to-end (full curves: benchmarks.fig2_scaling).
 python -m benchmarks.fig2_scaling --smoke >/dev/null
 
+# Wire smoke: codec throughput rows must produce end-to-end, and a k=3
+# mock training across REAL OS processes over SocketTransport must stay
+# bit-identical to LocalTransport with measured == analytic bytes
+# (examples/distributed_training.py asserts all three).  Codec
+# round-trip/rejection coverage itself is tests/test_codec.py in the
+# tier-1 sweep below.
+python -m benchmarks.run --only wire --smoke >/dev/null
+python examples/distributed_training.py --smoke >/dev/null
+
 exec python -m pytest -x -q "$@"

@@ -13,6 +13,14 @@ RING_BYTES = 8
 FLAG_BYTES = 1
 
 
+def ciphertext_wire_bytes(key_bits: int) -> int:
+    """Serialized size of ONE canonical Z_{n²} ciphertext: ⌈2·key_bits/8⌉.
+    The single source of truth — `runtime.messages`, the meter helper
+    below, and `crypto.paillier` all delegate here so the analytic
+    accounting can never disagree with what `runtime.codec` frames."""
+    return (2 * key_bits + 7) // 8
+
+
 @dataclasses.dataclass
 class Send:
     src: str
@@ -35,7 +43,7 @@ class CommMeter:
 
     def cipher(self, src: str, dst: str, tag: str, n_cts: int,
                key_bits: int) -> None:
-        self.add(src, dst, tag, n_cts * (2 * key_bits // 8))
+        self.add(src, dst, tag, n_cts * ciphertext_wire_bytes(key_bits))
 
     @property
     def total_bytes(self) -> int:

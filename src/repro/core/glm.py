@@ -10,18 +10,27 @@ Each GLM supplies
 Share-domain convention: all shared values carry `f` fractional bits; the
 1/m factor and fixed-point scaling are applied after gradient/loss values
 are *revealed to their owner* (exact, public constants).
+
+Execution forms: the share math is written once as per-CP *legs*
+(`*_leg(leg, ctx)` over a single share, `mpc.pairwise.PairLeg` carrying
+the Beaver interaction) so the socket runtime can run each computing
+party's half in its own process; the classic pair-at-once API
+(`gradient_operator(ctx)` / `loss_shares(ctx)` over `ShareCtx`) is the
+same legs driven in lockstep by `mpc.pairwise.joint` and stays
+bit-identical to the historical `mpc.beaver.mul`-based evaluation.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.crypto import ring
 from repro.crypto.ring import R64
-from repro.mpc import beaver, sharing, truncation
+from repro.mpc import beaver, pairwise
+from repro.mpc.pairwise import PairLeg
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,58 +44,97 @@ class ShareCtx:
     dealer: beaver.DealerTripleSource
 
 
-def _shift(shares: tuple[R64, R64], s: int) -> tuple[R64, R64]:
-    """Multiply the shared value by 2^-s (probabilistic truncation)."""
-    return truncation.trunc_pair(shares[0], shares[1], s)
+@dataclasses.dataclass(frozen=True)
+class LegCtx:
+    """ONE CP's view of the Protocol-1 outputs (share index = the
+    `PairLeg.index` it runs under)."""
+    z: R64
+    y: Optional[R64]
+    ez: Optional[R64]
+    f: int
+
+
+def _pair(leg_fn: Callable[[PairLeg, LegCtx], R64]
+          ) -> Callable[[ShareCtx], tuple[R64, R64]]:
+    """Lift a per-CP leg to the pair-at-once simulation API."""
+    def pair_fn(ctx: ShareCtx) -> tuple[R64, R64]:
+        def run(leg: PairLeg) -> R64:
+            i = leg.index
+            return leg_fn(leg, LegCtx(
+                z=ctx.z[i],
+                y=None if ctx.y is None else ctx.y[i],
+                ez=None if ctx.ez is None else ctx.ez[i],
+                f=ctx.f))
+        return pairwise.joint(run, ctx.dealer)
+    return pair_fn
+
+
+def ez_chain_leg(leg: PairLeg, ez_list: list[R64], f: int) -> R64:
+    """e^{Σz_p} = Π_p e^{z_p}: chain the parties' e^{z_p} shares with one
+    Beaver product (+ truncation) per factor.  `ez_list` must be in
+    roster order on both legs (the products do not commute bit-for-bit
+    under probabilistic truncation)."""
+    ez = ez_list[0]
+    for e in ez_list[1:]:
+        ez = leg.trunc(leg.mul(ez, e), f)
+    return ez
+
+
+def ez_chain_pair(ez_shares: list[tuple[R64, R64]], f: int, dealer
+                  ) -> tuple[R64, R64]:
+    """Pair-at-once form of `ez_chain_leg` (simulation scheduler)."""
+    return pairwise.joint(
+        lambda leg: ez_chain_leg(leg, [s[leg.index] for s in ez_shares], f),
+        dealer)
 
 
 # ---------------------------------------------------------------------------
 # Logistic regression (paper eq. 1, 2, 7) — Y ∈ {−1, +1}
 # ---------------------------------------------------------------------------
 
-def lr_gradient_operator(ctx: ShareCtx) -> tuple[R64, R64]:
-    """d = 0.25*WX − 0.5*Y (MacLaurin, eq. 7; 1/m deferred to reveal)."""
-    qz = _shift(ctx.z, 2)
-    hy = _shift(ctx.y, 1)
-    return (ring.sub(qz[0], hy[0]), ring.sub(qz[1], hy[1]))
+def lr_gradient_leg(leg: PairLeg, c: LegCtx) -> R64:
+    """d = 0.25*WX − 0.5*Y (MacLaurin, eq. 7; 1/m deferred to reveal).
+    Purely local: truncations and subtraction act share-wise."""
+    return ring.sub(leg.trunc(c.z, 2), leg.trunc(c.y, 1))
 
 
-def lr_loss_shares(ctx: ShareCtx) -> tuple[R64, R64]:
+def lr_loss_leg(leg: PairLeg, c: LegCtx) -> R64:
     """Σ_i ln(1+e^{−t}) with t=Y·WX, 2nd-order MacLaurin:
     ln2 − t/2 + t²/8 (same approximation family the paper uses)."""
-    n = ctx.z[0].lo.shape[0]
-    t = beaver.mul(ctx.y, ctx.z, *ctx.dealer.elementwise(ctx.z[0].lo.shape))
-    t = _shift(t, ctx.f)
-    t2 = beaver.mul(t, t, *ctx.dealer.elementwise(ctx.z[0].lo.shape))
-    t2 = _shift(t2, ctx.f)
-    half_t = truncation.trunc_pair(t[0], t[1], 1)
-    eighth_t2 = truncation.trunc_pair(t2[0], t2[1], 3)
-    li = (ring.sub(eighth_t2[0], half_t[0]), ring.sub(eighth_t2[1], half_t[1]))
-    s0 = ring.sum_axis(li[0], 0)
-    s1 = ring.sum_axis(li[1], 0)
-    ln2 = ring.from_signed_f64(np.float64(n * math.log(2.0)), ctx.f)
-    s0 = ring.add(s0, ln2)   # public constant: party 0 adds
-    return s0, s1
+    n = c.z.lo.shape[0]
+    t = leg.trunc(leg.mul(c.y, c.z), c.f)
+    t2 = leg.trunc(leg.mul(t, t), c.f)
+    half_t = leg.trunc(t, 1)
+    eighth_t2 = leg.trunc(t2, 3)
+    s = ring.sum_axis(ring.sub(eighth_t2, half_t), 0)
+    ln2 = ring.from_signed_f64(np.float64(n * math.log(2.0)), c.f)
+    return leg.add_pub(s, ln2)
+
+
+lr_gradient_operator = _pair(lr_gradient_leg)
+lr_loss_shares = _pair(lr_loss_leg)
 
 
 # ---------------------------------------------------------------------------
 # Poisson regression (paper eq. 3, 4, 8)
 # ---------------------------------------------------------------------------
 
-def pr_gradient_operator(ctx: ShareCtx) -> tuple[R64, R64]:
+def pr_gradient_leg(leg: PairLeg, c: LegCtx) -> R64:
     """d = e^{WX} − Y (eq. 8).  e^{WX} shares come from Protocol 1
-    (parties share local e^{W_p X_p}; products via Beaver, see trainer)."""
-    assert ctx.ez is not None, "Poisson needs shares of e^{WX}"
-    return (ring.sub(ctx.ez[0], ctx.y[0]), ring.sub(ctx.ez[1], ctx.y[1]))
+    (parties share local e^{W_p X_p}; products chained via Beaver)."""
+    assert c.ez is not None, "Poisson needs shares of e^{WX}"
+    return ring.sub(c.ez, c.y)
 
 
-def pr_loss_shares(ctx: ShareCtx) -> tuple[R64, R64]:
+def pr_loss_leg(leg: PairLeg, c: LegCtx) -> R64:
     """Σ_i (Y·WX − e^{WX}); the −ln(Y!) term is public to C and added
     after reveal (C holds Y in plaintext)."""
-    t = beaver.mul(ctx.y, ctx.z, *ctx.dealer.elementwise(ctx.z[0].lo.shape))
-    t = _shift(t, ctx.f)
-    li = (ring.sub(t[0], ctx.ez[0]), ring.sub(t[1], ctx.ez[1]))
-    return ring.sum_axis(li[0], 0), ring.sum_axis(li[1], 0)
+    t = leg.trunc(leg.mul(c.y, c.z), c.f)
+    return ring.sum_axis(ring.sub(t, c.ez), 0)
+
+
+pr_gradient_operator = _pair(pr_gradient_leg)
+pr_loss_shares = _pair(pr_loss_leg)
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +160,20 @@ class GLM:
     finalize_loss: Callable[[float, np.ndarray, int], float]
     # sign of the exponent when parties share e^{±z_p} (poisson +1, gamma −1)
     exp_sign: int = 1
+    # per-CP leg forms of the joint share math (socket runtime) — the
+    # pair-at-once callables above are these legs driven in lockstep
+    gradient_leg: Callable[[PairLeg, LegCtx], R64] | None = None
+    loss_leg: Callable[[PairLeg, LegCtx], R64] | None = None
+
+
+def linear_gradient_leg(leg: PairLeg, c: LegCtx) -> R64:
+    return ring.sub(c.z, c.y)
+
+
+def linear_loss_leg(leg: PairLeg, c: LegCtx) -> R64:
+    r = ring.sub(c.z, c.y)
+    r2 = leg.trunc(leg.mul(r, r), c.f + 1)
+    return ring.sum_axis(r2, 0)
 
 
 LOGISTIC = GLM(
@@ -124,6 +186,8 @@ LOGISTIC = GLM(
         np.log(2.0) - 0.5 * (y * wx) + (y * wx) ** 2 / 8.0)),
     predict=lambda wx: sigmoid(wx),
     finalize_loss=lambda revealed, y, m: revealed / m,
+    gradient_leg=lr_gradient_leg,
+    loss_leg=lr_loss_leg,
 )
 
 POISSON = GLM(
@@ -137,26 +201,22 @@ POISSON = GLM(
     predict=lambda wx: np.exp(wx),
     finalize_loss=lambda revealed, y, m: (
         float(np.sum(_log_factorial(y))) - revealed) / m,
+    gradient_leg=pr_gradient_leg,
+    loss_leg=pr_loss_leg,
 )
 
 LINEAR = GLM(   # bonus GLM (paper: "also suitable for Linear, Gamma, …")
     name="linear",
-    gradient_operator=lambda ctx: (ring.sub(ctx.z[0], ctx.y[0]),
-                                   ring.sub(ctx.z[1], ctx.y[1])),
-    loss_shares=lambda ctx: _mse_loss_shares(ctx),
+    gradient_operator=_pair(linear_gradient_leg),
+    loss_shares=_pair(linear_loss_leg),
     needs_exp=False,
     d_float=lambda wx, y: wx - y,
     loss_float=lambda wx, y: float(0.5 * np.mean((wx - y) ** 2)),
     predict=lambda wx: wx,
     finalize_loss=lambda revealed, y, m: revealed / m,
+    gradient_leg=linear_gradient_leg,
+    loss_leg=linear_loss_leg,
 )
-
-
-def _mse_loss_shares(ctx: ShareCtx) -> tuple[R64, R64]:
-    r = (ring.sub(ctx.z[0], ctx.y[0]), ring.sub(ctx.z[1], ctx.y[1]))
-    r2 = beaver.mul(r, r, *ctx.dealer.elementwise(ctx.z[0].lo.shape))
-    r2 = _shift(r2, ctx.f + 1)
-    return ring.sum_axis(r2[0], 0), ring.sum_axis(r2[1], 0)
 
 
 def _log_factorial(y: np.ndarray) -> np.ndarray:
@@ -168,26 +228,26 @@ def _log_factorial(y: np.ndarray) -> np.ndarray:
 # Tweedie regression, etc.") — log link, so the gradient-operator has the
 # same e^{WX} − y·(…) structure as Poisson and reuses its share plumbing.
 
-def gamma_gradient_operator(ctx: ShareCtx) -> tuple[R64, R64]:
+def gamma_gradient_leg(leg: PairLeg, c: LegCtx) -> R64:
     """Gamma with log link: d = 1 − y·e^{−WX}.  Protocol form: parties
     share e^{-z_p} in the ez slot (trainer handles the sign), giving
     d = 1 − y∘ez via one Beaver product."""
-    assert ctx.ez is not None
-    prod = beaver.mul(ctx.y, ctx.ez,
-                      *ctx.dealer.elementwise(ctx.z[0].lo.shape))
-    prod = _shift(prod, ctx.f)
-    one = ring.from_signed_f64(np.ones(ctx.z[0].lo.shape), ctx.f)
-    return (ring.sub(one, prod[0]), ring.neg(prod[1]))
+    assert c.ez is not None
+    prod = leg.trunc(leg.mul(c.y, c.ez), c.f)
+    if leg.index == 0:
+        one = ring.from_signed_f64(np.ones(c.z.lo.shape), c.f)
+        return ring.sub(one, prod)
+    return ring.neg(prod)
 
 
-def gamma_loss_shares(ctx: ShareCtx) -> tuple[R64, R64]:
+def gamma_loss_leg(leg: PairLeg, c: LegCtx) -> R64:
     """Σ_i (WX + y·e^{−WX}) (unit-deviance core; constants at C)."""
-    prod = beaver.mul(ctx.y, ctx.ez,
-                      *ctx.dealer.elementwise(ctx.z[0].lo.shape))
-    prod = _shift(prod, ctx.f)
-    li = (ring.add(ctx.z[0], prod[0]), ring.add(ctx.z[1], prod[1]))
-    return ring.sum_axis(li[0], 0), ring.sum_axis(li[1], 0)
+    prod = leg.trunc(leg.mul(c.y, c.ez), c.f)
+    return ring.sum_axis(ring.add(c.z, prod), 0)
 
+
+gamma_gradient_operator = _pair(gamma_gradient_leg)
+gamma_loss_shares = _pair(gamma_loss_leg)
 
 GAMMA = GLM(
     name="gamma",
@@ -199,6 +259,22 @@ GAMMA = GLM(
     predict=lambda wx: np.exp(wx),
     finalize_loss=lambda revealed, y, m: revealed / m,
     exp_sign=-1,
+    gradient_leg=gamma_gradient_leg,
+    loss_leg=gamma_loss_leg,
 )
 
 GLMS = {g.name: g for g in (LOGISTIC, POISSON, LINEAR, GAMMA)}
+
+#: Beaver multiplications in the gradient-operator + loss legs (the
+#: e^z chaining adds k−1 more for exp-family models) — see
+#: `joint_muls_per_iteration`.
+JOINT_LOSS_MULS = {"logistic": 2, "linear": 1, "poisson": 1, "gamma": 2}
+
+
+def joint_muls_per_iteration(glm_name: str, n_parties: int) -> int:
+    """Beaver-triple draws the CP pair consumes in one Algorithm-1
+    iteration.  The distributed runtime uses this to keep every party's
+    seed-replicated dealer stream aligned: non-CP parties `skip()` this
+    many draws per iteration, CP parties assert they drew exactly it."""
+    chain = n_parties - 1 if GLMS[glm_name].needs_exp else 0
+    return chain + JOINT_LOSS_MULS[glm_name]

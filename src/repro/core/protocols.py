@@ -271,8 +271,12 @@ class PaillierBackend:
         return paillier.add_ct(pub, cts, cr, self.engine)
 
     def decrypt_to_r64(self, party: str, cts) -> R64:
-        dec = paillier.decrypt_crt(self.keys[party], cts,
-                                   engine=self.engine)
+        key = self.keys[party]
+        if not hasattr(key, "lam"):     # paillier.PeerKey: public half only
+            raise PermissionError(
+                f"cannot decrypt under {party!r}: this backend view holds "
+                "only the peer's public key (distributed runtime)")
+        dec = paillier.decrypt_crt(key, cts, engine=self.engine)
         return fixed_point.limbs_to_r64(dec)
 
 

@@ -128,6 +128,28 @@ class PrivateKey:
     q_pinv_mont: np.ndarray | None = None   # p^{-1}·R_q mod q (CRT combine)
 
 
+@dataclasses.dataclass(frozen=True)
+class PeerKey:
+    """A *peer's* keypair as this party sees it: public half only.
+
+    Shaped so HE-backend key dicts can mix `PrivateKey` (own) and
+    `PeerKey` (everyone else) — every public-key operation reads `.pub`;
+    decryption requires the full `PrivateKey` and fails loudly on a
+    `PeerKey` (a party can never decrypt under a key it doesn't own).
+    """
+    pub: PublicKey
+
+
+def public_key_from_n(n: int, key_bits: int) -> PublicKey:
+    """Rebuild a `PublicKey` from the modulus a peer announced (the
+    distributed handshake ships only `n`; all derived constants are
+    recomputed locally)."""
+    mod_n = Modulus.make(n)
+    return PublicKey(n=n, key_bits=key_bits, mod_n=mod_n,
+                     mod_n2=Modulus.make(n * n),
+                     n_limbs=int_to_limbs(n, mod_n.L))
+
+
 def _crt_component(prime: int, n: int) -> CRTComponent:
     p2 = prime * prime
     mod_p2 = Modulus.make(p2)
@@ -368,4 +390,5 @@ def hom_sum(pub: PublicKey, c, axis: int = 0, engine=None) -> jnp.ndarray:
 
 def ciphertext_bytes(pub: PublicKey) -> int:
     """Wire size of one ciphertext (serialized canonical form)."""
-    return 2 * pub.key_bits // 8
+    from repro.core.comm import ciphertext_wire_bytes
+    return ciphertext_wire_bytes(pub.key_bits)

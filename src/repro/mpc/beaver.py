@@ -49,6 +49,16 @@ class DealerTripleSource:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    def skip(self, n: int) -> None:
+        """Advance the triple stream by `n` draws without materializing
+        them.  The distributed runtime replicates one dealer per party
+        from the shared seed; parties not selected as computing parties
+        this iteration skip the draws the CP pair consumed so every
+        replica stays stream-aligned (one key split per draw, shapes
+        irrelevant)."""
+        for _ in range(n):
+            self._next_key()
+
     def elementwise(self, shape) -> tuple[TripleShares, TripleShares]:
         ka, kb, ks1, ks2, ks3 = jax.random.split(self._next_key(), 5)
         a = R64(*prng.u32_pair(ka, shape))

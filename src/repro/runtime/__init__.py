@@ -4,20 +4,25 @@ The deployment seam for EFMVFL — protocol code talks to a Transport
 instead of shared local variables, so the same actors run under the
 bit-exact local replay, the concurrent-leg pipelined schedule
 (`PipelinedTransport`: per-message pool futures via `pump_async`,
-join barrier before Protocol 4), or (future) real multi-host
-transports.  See docs/architecture.md for the layer diagram and
-docs/protocols.md for the paper ↔ code map.
+join barrier before Protocol 4), or real OS processes over TCP
+(`SocketTransport` + `netparty.PartyServer`, launched by
+`launch/cluster.py`).  See docs/architecture.md for the layer diagram,
+docs/protocols.md for the paper ↔ code map, and docs/transports.md for
+the wire format and distributed deployment.
 """
 from repro.runtime import messages
+from repro.runtime.codec import Codec, CodecError
 from repro.runtime.party import CPState, DataParty, LabelParty, Party
 from repro.runtime.scheduler import (TransportDealer, VFLScheduler,
                                      mask_bound_bits, validate_key_bits)
 from repro.runtime.transport import (LocalTransport, LockedRNG,
-                                     PipelinedTransport, Transport)
+                                     PipelinedTransport, SocketTransport,
+                                     Transport)
 
 __all__ = [
     "messages", "Party", "DataParty", "LabelParty", "CPState",
     "VFLScheduler", "TransportDealer", "mask_bound_bits",
     "validate_key_bits", "Transport", "LocalTransport",
-    "PipelinedTransport", "LockedRNG",
+    "PipelinedTransport", "SocketTransport", "LockedRNG",
+    "Codec", "CodecError",
 ]

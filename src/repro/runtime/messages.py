@@ -28,7 +28,7 @@ from typing import Any, ClassVar
 
 import numpy as np
 
-from repro.core.comm import FLAG_BYTES, RING_BYTES
+from repro.core.comm import FLAG_BYTES, RING_BYTES, ciphertext_wire_bytes
 
 TAG_PROTOCOL: dict[str, str] = {
     "P1.z_share": "Protocol 1 / Alg.1 line 7 — share of z_p = X_p W_p",
@@ -46,8 +46,13 @@ TAG_PROTOCOL: dict[str, str] = {
 
 
 def ciphertext_bytes(n_cts: int, key_bits: int) -> int:
-    """Canonical Paillier ciphertext: an element of Z_{n²} (2·key_bits)."""
-    return n_cts * (2 * key_bits // 8)
+    """Canonical Paillier ciphertext batch: elements of Z_{n²}, each
+    serialized as ⌈2·key_bits / 8⌉ bytes.  (The ceiling matters: for key
+    sizes not divisible by 4 the old floor division under-counted what
+    the codec actually has to put on the wire — runtime/codec.py asserts
+    the two agree for every encoded message.)  Delegates to
+    `core.comm.ciphertext_wire_bytes`, the shared single formula."""
+    return n_cts * ciphertext_wire_bytes(key_bits)
 
 
 @dataclasses.dataclass
@@ -189,6 +194,26 @@ class Flag(Message):
 
     def wire_bytes(self) -> int:
         return FLAG_BYTES
+
+
+@dataclasses.dataclass
+class Control(Message):
+    """Conductor-plane envelope for the distributed runtime (handshake,
+    iteration barriers, result collection, scoring RPCs, shutdown).
+
+    `kind` selects the action; `payload` is a JSON-able dict.  Control
+    frames ride the same socket framing as protocol messages but are
+    NOT protocol traffic: they are never routed through the metered
+    `Transport.post` path, so per-tag byte accounting stays comparable
+    with the single-process transports (the paper's comm columns count
+    protocol payloads only).  See docs/transports.md for the kinds.
+    """
+    kind: str = ""
+    tag: ClassVar[str] = "ctrl"
+
+    def wire_bytes(self) -> int:
+        import json
+        return len(json.dumps(self.payload or {}).encode())
 
 
 def iteration_traffic(n_parties: int, nb: int, m_per_party: int,

@@ -58,8 +58,16 @@ class CPState:
     ct_self: object = None              # [[⟨d⟩]] under own key
     z_acc: Optional[R64] = None         # Σ_p ⟨z_p⟩  (Protocol 1)
     y_share: Optional[R64] = None
-    ez_list: list = dataclasses.field(default_factory=list)
+    ez_by_src: dict = dataclasses.field(default_factory=dict)
     l_self: Optional[R64] = None        # ⟨loss⟩ from Protocol 4
+    n_p1: int = 0                       # Protocol-1 envelopes absorbed
+
+    def ez_ordered(self, names: list[str]) -> list[R64]:
+        """e^{z_p} shares in roster order — the chaining order must not
+        depend on message arrival order (socket delivery is racy; the
+        chained Beaver products don't commute bit-for-bit under
+        probabilistic truncation)."""
+        return [self.ez_by_src[n] for n in names if n in self.ez_by_src]
 
 
 class CPRole:
@@ -69,13 +77,14 @@ class CPRole:
 
     def accumulate_share(self, m: msg.RingMessage) -> None:
         st = self.cp
+        st.n_p1 += 1
         if isinstance(m, msg.ZShare):
             st.z_acc = m.payload if st.z_acc is None \
                 else ring.add(st.z_acc, m.payload)
         elif isinstance(m, msg.YShare):
             st.y_share = m.payload
         elif isinstance(m, msg.EzShare):
-            st.ez_list.append(m.payload)
+            st.ez_by_src[m.src] = m.payload
 
     def announce_enc_d(self) -> msg.EncD:
         """Protocol 3 line 1: encrypt ⟨d⟩ under own key, send to the peer

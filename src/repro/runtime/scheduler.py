@@ -35,8 +35,9 @@ import numpy as np
 
 from repro.core import glm as glm_lib
 from repro.core import protocols
-from repro.mpc import beaver, truncation
+from repro.mpc import beaver
 from repro.runtime import messages as msg
+from repro.runtime import seeds
 from repro.runtime.party import DataParty, LabelParty, Party
 from repro.runtime.transport import LocalTransport, Transport
 
@@ -77,12 +78,19 @@ def mask_bound_bits(cfg) -> int:
     return 64 + cfg.exp_width + int(np.ceil(np.log2(cfg.batch_size))) + 1
 
 
+def min_key_bits(cfg) -> int:
+    """Smallest key that can carry a live run's masked values:
+    mask bound + STAT_SEC statistical-hiding bits + 2 slack bits (the
+    masked value + mask sum must stay < n so mod-2^64 share recovery is
+    exact)."""
+    return mask_bound_bits(cfg) + protocols.STAT_SEC + 2
+
+
 def validate_key_bits(cfg, bound: int) -> None:
     """Check the Paillier plaintext-capacity bound
-    key_bits ≥ bound + STAT_SEC + 2 (masked value + mask must stay < n
-    so mod-2^64 share recovery is exact).  Enforced for BOTH backends:
-    a mock run whose key couldn't carry its own masked values would
-    report wire bytes a real deployment can't achieve.
+    key_bits ≥ bound + STAT_SEC + 2 (see `min_key_bits`).  Enforced for
+    BOTH backends: a mock run whose key couldn't carry its own masked
+    values would report wire bytes a real deployment can't achieve.
 
     Args:
       cfg: `VFLConfig` (uses `key_bits`).
@@ -125,15 +133,18 @@ class VFLScheduler:
         self.transport = transport if transport is not None \
             else LocalTransport()
         self.names = [p.name for p in party_data]
-        rng = np.random.default_rng(cfg.seed + 90001)   # protocol randomness
+        rng = seeds.protocol_rng(cfg.seed)              # protocol randomness
         self.rng = self.transport.wrap_rng(rng)
         self.select_rng = self.transport.cp_select_rng(self.rng, cfg.seed)
         self.batch_rng = np.random.default_rng(cfg.seed)  # batch schedule
         self.jkey = jax.random.key(cfg.seed)              # (matches oracle)
         if backend is None:
+            # consumes the protocol stream's first k draws as key seeds
+            # (replicated by runtime.seeds.key_seeds for the socket path)
             backend = trainer_lib.make_backend(cfg, self.names, self.rng)
         self.backend = backend
-        self.dealer = beaver.DealerTripleSource(seed=cfg.seed + 1)
+        self.dealer = beaver.DealerTripleSource(
+            seed=seeds.dealer_seed(cfg.seed))
         self.mask_bound = mask_bound_bits(cfg)
         validate_key_bits(cfg, self.mask_bound)
         self.parties: list[Party] = [
@@ -234,12 +245,10 @@ class VFLScheduler:
                 tp.post_all(out)
             tp.pump(order=list(cps))
             # e^{Σz_p} = Π e^{z_p}: chained Beaver products over the pair
-            e0, e1 = cp0.cp.ez_list, cp1.cp.ez_list
-            ez = (e0[0], e1[0])
-            for j in range(1, len(e0)):
-                prod = beaver.mul(ez, (e0[j], e1[j]),
-                                  *mdealer.elementwise((nb,)))
-                ez = truncation.trunc_pair(prod[0], prod[1], cfg.f)
+            # (roster order — arrival order is racy under pump_async)
+            e0 = cp0.cp.ez_ordered(self.names)
+            e1 = cp1.cp.ez_ordered(self.names)
+            ez = glm_lib.ez_chain_pair(list(zip(e0, e1)), cfg.f, mdealer)
 
         ctx = glm_lib.ShareCtx(z=(cp0.cp.z_acc, cp1.cp.z_acc),
                                y=(cp0.cp.y_share, cp1.cp.y_share),

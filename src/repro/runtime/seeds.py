@@ -1,0 +1,62 @@
+"""Seed-stream registry: every derived randomness stream in one place.
+
+The single-process scheduler and the process-isolated socket runtime
+must derive bit-identical streams from one run seed, and the frozen
+seed-trainer oracle in tests must keep matching both — so the offsets
+and derivations live here, not as magic numbers scattered per module.
+
+Streams:
+
+  protocol_rng(seed)     masks, Paillier noise, random CP selection on
+                         the bit-exact local replay, and — via its
+                         FIRST k draws — the per-party key seeds
+                         (`trainer.make_backend` consumes this stream
+                         directly; `key_seeds` replicates those draws
+                         for the distributed runtime).
+  cp_select_rng(seed)    dedicated CP-selection stream for transports
+                         whose mask draws are not globally ordered
+                         (PipelinedTransport threads, socket cluster).
+  party_rng(seed, i)     per-party mask/noise stream in the socket
+                         runtime (mask values cancel exactly, so this
+                         may differ from the local replay's shared
+                         stream without changing the trained model).
+  dealer_seed(seed)      Beaver-triple dealer; each party replicates it
+                         (`DealerTripleSource(dealer_seed(s))`) and
+                         keeps it aligned via `skip()`.
+  (batch schedule and the Protocol-1 jax key ladder use the run seed
+  itself: `np.random.default_rng(seed)` / `jax.random.key(seed)`.)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: offset of the shared protocol stream (masks/noise/keygen draws)
+PROTOCOL_OFFSET = 90001
+#: offset of the dedicated CP-selection stream
+CP_SELECT_OFFSET = 90002
+#: tag separating per-party streams in the socket runtime
+PARTY_STREAM_TAG = 90101
+
+
+def protocol_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed + PROTOCOL_OFFSET)
+
+
+def cp_select_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed + CP_SELECT_OFFSET)
+
+
+def party_rng(seed: int, party_index: int) -> np.random.Generator:
+    return np.random.default_rng([seed, PARTY_STREAM_TAG, party_index])
+
+
+def dealer_seed(seed: int) -> int:
+    return seed + 1
+
+
+def key_seeds(seed: int, names: list[str]) -> dict[str, int]:
+    """The per-party Paillier key seeds, exactly as `trainer.make_backend`
+    draws them: the first k scalar draws of the protocol stream, in
+    roster order."""
+    rng = protocol_rng(seed)
+    return {n: int(rng.integers(2 ** 31)) for n in names}

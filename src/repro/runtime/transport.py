@@ -12,6 +12,15 @@ paper's comm-rounds columns) for free.
   simulation: messages are delivered sequentially in a deterministic
   order, and shared-randomness consumption matches the seed trainer
   draw-for-draw.
+* `SocketTransport` — the real wire: every posted envelope is encoded
+  by the versioned binary codec (`runtime.codec`) and written to a TCP
+  connection; inbound frames are decoded by per-connection reader
+  threads into one event queue the hosting `netparty.PartyServer` (or
+  the conductor) drains.  Analytic metering is identical to the local
+  transports; additionally the *measured* payload bytes of every frame
+  actually sent are recorded per tag, and frame/header overhead is
+  tracked separately, so analytic accounting can be asserted against
+  the wire.
 * `PipelinedTransport` — overlaps the data-independent legs of
   Protocol 3: the CP↔CP encrypted-gradient exchange and the CP→non-CP
   broadcasts enter the same sweep (they only depend on the Protocol-2
@@ -30,12 +39,15 @@ paper's comm-rounds columns) for free.
 from __future__ import annotations
 
 import collections
+import queue as _queue
+import socket as _socket
 import threading
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 
 import numpy as np
 
 from repro.core.comm import CommMeter
+from repro.runtime.codec import frame_overhead_bytes
 from repro.runtime.messages import Message
 
 
@@ -199,7 +211,8 @@ class PipelinedTransport(Transport):
         return LockedRNG(rng)
 
     def cp_select_rng(self, shared_rng, seed: int):
-        return np.random.default_rng(seed + 90002)
+        from repro.runtime import seeds
+        return seeds.cp_select_rng(seed)
 
     def _sweep(self, snapshot) -> None:
         if len(snapshot) <= 1:
@@ -253,3 +266,158 @@ class PipelinedTransport(Transport):
                     futs[self._pool.submit(self._handle_locked, m)] = gen + 1
                     max_gen = max(max_gen, gen + 1)
         self.rounds += max_gen
+
+
+# ---------------------------------------------------------------------------
+# Socket transport — encoded frames over TCP between party processes
+# ---------------------------------------------------------------------------
+
+class PeerClosed(ConnectionError):
+    """A peer's connection closed or failed mid-protocol."""
+
+
+class SocketTransport(Transport):
+    """One node's endpoint of the distributed runtime.
+
+    Unlike the in-process transports, delivery is event-driven rather
+    than sweep-driven: `post` serializes the envelope with the binary
+    codec and writes it to the destination's TCP connection (a message
+    to oneself is a local handoff straight into the event queue, never
+    metered — same rule as the in-process transports), and every
+    connection has a reader thread that decodes inbound frames into
+    `inbound`, which the hosting event loop (`netparty.PartyServer` /
+    `launch.cluster.SocketCluster`) drains.  `pump` therefore does not
+    apply here and raises.
+
+    Byte accounting:
+      * `meter`     — analytic `wire_bytes()` per tag (identical to the
+        local transports for the same protocol run);
+      * `measured`  — actual encoded payload bytes per tag, as framed on
+        the wire (asserted equal to `meter` in the parity tests);
+      * `overhead_bytes` / `frames_sent` — codec prelude + header cost,
+        reported separately (the paper's comm columns count payloads).
+
+    Control frames (`messages.Control`) ride the same connections via
+    `send_control` but touch neither meter: they are conductor
+    orchestration, not protocol traffic.
+    """
+
+    def __init__(self, name: str, codec, meter: CommMeter | None = None):
+        super().__init__(meter)
+        self.name = name
+        self.codec = codec
+        self.measured = CommMeter()
+        self.overhead_bytes = 0
+        self.frames_sent = 0
+        self.inbound: "queue.Queue" = _queue.Queue()
+        self._conns: dict[str, "socket.socket"] = {}
+        self._send_locks: dict[str, threading.Lock] = {}
+        self._readers: list[threading.Thread] = []
+        self._closing = False
+
+    # -- wiring -------------------------------------------------------------
+    def attach(self, peer: str, sock) -> None:
+        """Register an established connection to `peer` and start its
+        reader thread.  The reader blocks without a timeout — a mesh
+        link between two parties that exchange nothing for a long run
+        (e.g. two non-CPs) must not fake a peer loss; liveness bounds
+        live on the *waiters* (event-queue timeouts), not the wire."""
+        sock.settimeout(None)
+        self._conns[peer] = sock
+        self._send_locks[peer] = threading.Lock()
+        t = threading.Thread(target=self._reader, args=(peer, sock),
+                             name=f"wire-{self.name}-from-{peer}",
+                             daemon=True)
+        self._readers.append(t)
+        t.start()
+
+    def peers(self):
+        return list(self._conns)
+
+    # -- sending ------------------------------------------------------------
+    def _send_frame(self, dst: str, frame: bytes) -> None:
+        sock = self._conns.get(dst)
+        if sock is None:
+            raise PeerClosed(f"{self.name}: no connection to {dst!r}")
+        with self._send_locks[dst]:
+            sock.sendall(frame)
+
+    def post(self, m: Message) -> None:
+        if m.dst == self.name:              # local handoff, never metered
+            self.inbound.put(m)
+            return
+        frame = self.codec.encode(m)
+        if m.src != m.dst:
+            self.account(m)
+            overhead = frame_overhead_bytes(frame)
+            self.measured.add(m.src, m.dst, m.tag, len(frame) - overhead)
+            self.overhead_bytes += overhead
+            self.frames_sent += 1
+        self._send_frame(m.dst, frame)
+
+    def send_control(self, m: Message) -> None:
+        """Ship a control frame without touching the protocol meters."""
+        if m.dst == self.name:
+            self.inbound.put(m)
+            return
+        frame = self.codec.encode(m)
+        self.overhead_bytes += len(frame)
+        self._send_frame(m.dst, frame)
+
+    # -- receiving ----------------------------------------------------------
+    def _reader(self, peer: str, sock) -> None:
+        from repro.runtime import messages as msg_lib
+        try:
+            while True:
+                m = recv_frame(sock, self.codec)
+                self.inbound.put(m)
+        except Exception as e:               # noqa: BLE001 — surfaced below
+            if not self._closing:
+                self.inbound.put(msg_lib.Control(
+                    peer, self.name, kind="__closed__",
+                    payload={"error": f"{type(e).__name__}: {e}"}))
+
+    # -- lifecycle ----------------------------------------------------------
+    def pump(self, order=None) -> None:
+        raise NotImplementedError(
+            "SocketTransport is event-driven; the hosting PartyServer/"
+            "conductor drains .inbound instead of pump sweeps")
+
+    def close(self) -> None:
+        self._closing = True
+        for sock in self._conns.values():
+            try:
+                sock.shutdown(_socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        self._conns.clear()
+
+
+def _recv_exact(sock, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise PeerClosed("connection closed mid-frame")
+        buf += chunk
+    return bytes(buf)
+
+
+#: refuse frames whose declared sizes are absurd — corrupt/hostile
+#: preludes must not drive allocations.
+MAX_FRAME_BYTES = 1 << 30
+
+
+def recv_frame(sock, codec):
+    """Read exactly one codec frame from a blocking socket."""
+    from repro.runtime.codec import PRELUDE, CodecError
+    prelude = _recv_exact(sock, PRELUDE.size)
+    _, _, hlen, plen, _ = PRELUDE.unpack(prelude)
+    if hlen + plen > MAX_FRAME_BYTES:
+        raise CodecError(f"frame too large ({hlen + plen} bytes)")
+    body = _recv_exact(sock, hlen + plen)
+    return codec.decode(prelude + body)

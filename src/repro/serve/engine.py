@@ -141,18 +141,38 @@ class VFLScoringEngine:
     share X_p W_p via `Party.predict_share` and ships it to C as an
     `infer.wx_share` message through the transport (metered + round-
     counted like training traffic); C sums the shares and applies the
-    inverse link.  Raw features and per-party weights never move."""
+    inverse link.  Raw features and per-party weights never move.
 
-    def __init__(self, parties, transport=None, max_batch: int = 64):
-        from repro.runtime import LocalTransport
-        from repro.runtime.party import LabelParty
-        assert isinstance(parties[0], LabelParty), \
-            "parties[0] must be the label party C (e.g. from a VFLScheduler)"
-        self.parties = list(parties)
-        self.label = self.parties[0]
-        self.transport = transport if transport is not None \
-            else LocalTransport()
-        self.transport.bind(self.parties)
+    Two hosting modes:
+      * in-process (`parties=` actors + a local transport) — the
+        trainer's actors serve directly;
+      * distributed (`cluster=` a started `launch.cluster.SocketCluster`)
+        — every micro-batch is scored by the real party *processes*:
+        the conductor fans the feature slices out as control frames and
+        the score shares travel party→C over the TCP mesh as encoded
+        `infer.wx_share` frames.
+    """
+
+    def __init__(self, parties=None, transport=None, max_batch: int = 64,
+                 cluster=None):
+        assert (parties is None) != (cluster is None), \
+            "pass either in-process actors (parties=) or a SocketCluster"
+        self.cluster = cluster
+        if parties is not None:
+            from repro.runtime import LocalTransport
+            from repro.runtime.party import LabelParty
+            assert isinstance(parties[0], LabelParty), \
+                "parties[0] must be the label party C " \
+                "(e.g. from a VFLScheduler)"
+            self.parties = list(parties)
+            self.label = self.parties[0]
+            self.transport = transport if transport is not None \
+                else LocalTransport()
+            self.transport.bind(self.parties)
+        else:
+            self.parties = None
+            self.label = None
+            self.transport = cluster.tp
         self.max_batch = max_batch
         self.queue: deque[ScoreRequest] = deque()
         self.finished: list[ScoreRequest] = []
@@ -174,15 +194,20 @@ class VFLScoringEngine:
                  for _ in range(min(self.max_batch, len(self.queue)))]
         if not batch:
             return 0
-        X = {p.name: np.stack([r.features[p.name] for r in batch])
-             for p in self.parties}
-        self.label.begin_inference(len(batch), len(self.parties))
-        for p in self.parties:
-            if p.name != self.label.name:
-                self.transport.post(p.wx_share_msg(X[p.name],
-                                                   dst=self.label.name))
-        self.transport.pump(order=[self.label.name])
-        preds = self.label.finish_inference(X[self.label.name])
+        if self.cluster is not None:
+            X = {name: np.stack([r.features[name] for r in batch])
+                 for name in self.cluster.names}
+            preds = self.cluster.score(X)
+        else:
+            X = {p.name: np.stack([r.features[p.name] for r in batch])
+                 for p in self.parties}
+            self.label.begin_inference(len(batch), len(self.parties))
+            for p in self.parties:
+                if p.name != self.label.name:
+                    self.transport.post(p.wx_share_msg(X[p.name],
+                                                       dst=self.label.name))
+            self.transport.pump(order=[self.label.name])
+            preds = self.label.finish_inference(X[self.label.name])
         for r, pred in zip(batch, preds):
             r.prediction = float(pred)
             self.finished.append(r)

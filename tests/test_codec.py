@@ -1,0 +1,309 @@
+"""Round-trip and rejection suite for the binary wire codec.
+
+Invariants:
+  * decode(encode(m)) == m for every message type, across key sizes,
+    payload dtypes, and empty/edge shapes;
+  * the encoded payload length equals `wire_bytes()` for every
+    data-plane frame (analytic comm accounting == the wire, enforced by
+    the encoder itself — these tests also measure it independently);
+  * truncated and corrupted frames are rejected with `CodecError`.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.crypto import fixed_point, paillier, ring
+from repro.crypto.ring import R64
+from repro.runtime import messages as msg
+from repro.runtime.codec import (Codec, CodecError, PRELUDE,
+                                 frame_overhead_bytes)
+
+CODEC = Codec()
+
+
+def _rand_r64(shape, seed):
+    rng = np.random.default_rng(seed)
+    return ring.from_numpy_u64(
+        rng.integers(0, 1 << 64, size=shape, dtype=np.uint64))
+
+
+def _payload_len(frame: bytes) -> int:
+    return len(frame) - frame_overhead_bytes(frame)
+
+
+def _assert_ring_equal(a: R64, b: R64):
+    np.testing.assert_array_equal(ring.to_numpy_u64(a), ring.to_numpy_u64(b))
+
+
+# ---------------------------------------------------------------------------
+# ring-payload messages
+# ---------------------------------------------------------------------------
+
+RING_TYPES = [msg.ZShare, msg.YShare, msg.EzShare, msg.BeaverOpen,
+              msg.UnmaskedShare, msg.LossShare]
+
+
+@pytest.mark.parametrize("cls", RING_TYPES)
+@pytest.mark.parametrize("shape", [(), (1,), (5,), (0,), (2, 3), (2, 0)])
+def test_ring_roundtrip_shapes(cls, shape):
+    v = _rand_r64(shape, seed=hash((cls.__name__, shape)) % (1 << 31))
+    m = cls("B1", "C", v)
+    frame = CODEC.encode(m)
+    out = CODEC.decode(frame)
+    assert type(out) is cls and out.src == "B1" and out.dst == "C"
+    assert out.payload.lo.shape == shape
+    _assert_ring_equal(out.payload, v)
+    n = int(np.prod(shape)) if shape else 1
+    assert _payload_len(frame) == m.wire_bytes() == n * 8
+
+
+def test_ring_synthetic_traffic_roundtrip():
+    """payload=None + n_elems — dry-run traffic synthesis frames."""
+    m = msg.ZShare("B2", "C", None, n_elems=17)
+    out = CODEC.decode(CODEC.encode(m))
+    assert out.payload is None and out.n_elems == 17
+    assert out.wire_bytes() == m.wire_bytes() == 17 * 8
+
+
+def test_ring_n_elems_consistency_enforced():
+    v = _rand_r64((4,), seed=3)
+    with pytest.raises(CodecError):
+        CODEC.encode(msg.ZShare("B1", "C", v, n_elems=5))
+
+
+def test_ring_empty_payload_with_zero_n_elems():
+    """n_elems=0 with a genuinely empty tensor is consistent, not an
+    error (0 must not be coerced to 1)."""
+    v = _rand_r64((0,), seed=3)
+    out = CODEC.decode(CODEC.encode(msg.ZShare("B1", "C", v, n_elems=0)))
+    assert out.payload.lo.shape == (0,) and out.n_elems == 0
+    assert out.wire_bytes() == 0
+
+
+@given(st.integers(min_value=0, max_value=200),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_ring_roundtrip_random(n, seed):
+    v = _rand_r64((n,), seed)
+    m = msg.UnmaskedShare("C", "B3", v)
+    out = CODEC.decode(CODEC.encode(m))
+    _assert_ring_equal(out.payload, v)
+
+
+def test_float_scores_roundtrip():
+    rng = np.random.default_rng(9)
+    wx = rng.normal(size=23)
+    m = msg.WxShare("B1", "C", wx, n_elems=23)
+    frame = CODEC.encode(m)
+    out = CODEC.decode(frame)
+    np.testing.assert_array_equal(out.payload, wx)   # bit-exact float64
+    assert _payload_len(frame) == m.wire_bytes() == 23 * 8
+
+
+def test_beaver_open_stacked_pair():
+    """The distributed runtime ships (d, e) halves as one stacked frame:
+    2 ring elements per product element, matching the analytic 2·n."""
+    d, e = _rand_r64((6,), 1), _rand_r64((6,), 2)
+    import jax.numpy as jnp
+    both = R64(jnp.stack([d.hi, e.hi]), jnp.stack([d.lo, e.lo]))
+    m = msg.BeaverOpen("C", "B1", both, n_elems=12)
+    frame = CODEC.encode(m)
+    assert _payload_len(frame) == m.wire_bytes() == 12 * 8
+    out = CODEC.decode(frame)
+    _assert_ring_equal(R64(out.payload.hi[0], out.payload.lo[0]), d)
+    _assert_ring_equal(R64(out.payload.hi[1], out.payload.lo[1]), e)
+
+
+# ---------------------------------------------------------------------------
+# flags + control
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stop", [False, True])
+def test_flag_roundtrip(stop):
+    frame = CODEC.encode(msg.Flag("C", "B7", stop=stop))
+    out = CODEC.decode(frame)
+    assert isinstance(out, msg.Flag) and out.stop is stop
+    assert _payload_len(frame) == 1
+
+
+def test_control_roundtrip():
+    payload = {"roster": [["C", "127.0.0.1", 4242]], "cfg": {"seed": 3},
+               "loss": 0.6931471805599453}
+    m = msg.Control("conductor", "C", payload=payload, kind="handshake")
+    out = CODEC.decode(CODEC.encode(m))
+    assert out.kind == "handshake" and out.payload == payload
+    assert out.payload["loss"] == payload["loss"]    # float64 round-trip
+
+
+# ---------------------------------------------------------------------------
+# ciphertexts — mock padding and real canonical packing
+# ---------------------------------------------------------------------------
+
+CT_TYPES = [msg.EncD, msg.EncDBroadcast, msg.MaskedGrad]
+
+
+@pytest.mark.parametrize("cls", CT_TYPES)
+@pytest.mark.parametrize("key_bits", [192, 256, 1024])
+def test_mock_ciphertext_roundtrip(cls, key_bits):
+    v = _rand_r64((5,), seed=key_bits)
+    m = cls("C", "B1", v, n_cts=5, key_bits=key_bits, key_owner="C")
+    frame = CODEC.encode(m)
+    assert _payload_len(frame) == m.wire_bytes() == 5 * (2 * key_bits // 8)
+    out = CODEC.decode(frame)
+    assert type(out) is cls
+    assert (out.n_cts, out.key_bits, out.key_owner) == (5, key_bits, "C")
+    _assert_ring_equal(out.payload, v)
+
+
+def test_mock_ciphertext_rejects_dirty_padding():
+    v = _rand_r64((2,), seed=1)
+    frame = bytearray(CODEC.encode(
+        msg.EncD("C", "B1", v, n_cts=2, key_bits=256, key_owner="C")))
+    # poke a byte inside the zero padding of the first ciphertext and
+    # re-seal the CRC so only the semantic check can catch it
+    import zlib
+    overhead = frame_overhead_bytes(bytes(frame))
+    frame[overhead + 20] = 0xAB
+    _, _, hlen, plen, _ = PRELUDE.unpack_from(bytes(frame))
+    crc = zlib.crc32(bytes(frame[PRELUDE.size:])) & 0xFFFFFFFF
+    frame[:PRELUDE.size] = PRELUDE.pack(b"EFM", 1, hlen, plen, crc)
+    with pytest.raises(CodecError):
+        CODEC.decode(bytes(frame))
+
+
+@pytest.mark.parametrize("key_bits", [192, 256])
+def test_paillier_ciphertext_roundtrip(key_bits):
+    """Canonical 2·key_bits-bit packing is bit-exact through the
+    Montgomery domain (reduced representatives are unique), and the
+    re-encoded batch decrypts to the original plaintexts."""
+    key = paillier.keygen(key_bits, seed=11)
+    pub = key.pub
+    rng = np.random.default_rng(4)
+    vals = ring.from_numpy_u64(
+        rng.integers(0, 1 << 64, size=6, dtype=np.uint64))
+    cts = paillier.encrypt(pub, fixed_point.r64_to_limbs(vals, pub.Ln),
+                           rng=rng)
+    codec = Codec(lambda owner: pub.mod_n2 if owner == "B2" else None)
+    m = msg.MaskedGrad("C", "B2", cts, n_cts=6, key_bits=key_bits,
+                       key_owner="B2")
+    frame = codec.encode(m)
+    assert _payload_len(frame) == m.wire_bytes() \
+        == 6 * ((2 * key_bits + 7) // 8)
+    out = codec.decode(frame)
+    np.testing.assert_array_equal(np.asarray(out.payload), np.asarray(cts))
+    dec = fixed_point.limbs_to_r64(paillier.decrypt_crt(key, out.payload))
+    _assert_ring_equal(dec, vals)
+
+
+def test_paillier_ciphertext_needs_key_provider():
+    key = paillier.keygen(192, seed=2)
+    rng = np.random.default_rng(1)
+    cts = paillier.encrypt(
+        key.pub, fixed_point.r64_to_limbs(_rand_r64((2,), 0), key.pub.Ln),
+        rng=rng)
+    m = msg.EncD("C", "B1", cts, n_cts=2, key_bits=192, key_owner="C")
+    with pytest.raises(CodecError):
+        Codec().encode(m)
+
+
+def test_paillier_out_of_range_residue_rejected():
+    """A residue >= n² cannot be a ciphertext — reject before to_mont."""
+    key = paillier.keygen(192, seed=5)
+    pub = key.pub
+    rng = np.random.default_rng(2)
+    cts = paillier.encrypt(
+        pub, fixed_point.r64_to_limbs(_rand_r64((1,), 7), pub.Ln), rng=rng)
+    codec = Codec(lambda owner: pub.mod_n2)
+    frame = bytearray(codec.encode(
+        msg.EncD("C", "B1", cts, n_cts=1, key_bits=192, key_owner="C")))
+    overhead = frame_overhead_bytes(bytes(frame))
+    frame[overhead:] = b"\xff" * (len(frame) - overhead)   # ≥ n² for sure
+    import zlib
+    _, _, hlen, plen, _ = PRELUDE.unpack_from(bytes(frame))
+    crc = zlib.crc32(bytes(frame[PRELUDE.size:])) & 0xFFFFFFFF
+    frame[:PRELUDE.size] = PRELUDE.pack(b"EFM", 1, hlen, plen, crc)
+    with pytest.raises(CodecError):
+        codec.decode(bytes(frame))
+
+
+# ---------------------------------------------------------------------------
+# malformed frames
+# ---------------------------------------------------------------------------
+
+def _sample_frame() -> bytes:
+    return CODEC.encode(msg.ZShare("B1", "C", _rand_r64((9,), 42)))
+
+
+@given(st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=20, deadline=None)
+def test_truncated_frames_rejected(frac):
+    frame = _sample_frame()
+    cut = min(int(len(frame) * frac), len(frame) - 1)
+    with pytest.raises(CodecError):
+        CODEC.decode(frame[:cut])
+
+
+@given(st.integers(min_value=0, max_value=10 ** 9))
+@settings(max_examples=30, deadline=None)
+def test_corrupted_frames_rejected(pos_seed):
+    frame = bytearray(_sample_frame())
+    pos = pos_seed % len(frame)
+    frame[pos] ^= 0x5A
+    with pytest.raises(CodecError):
+        CODEC.decode(bytes(frame))
+
+
+def test_trailing_garbage_rejected():
+    with pytest.raises(CodecError):
+        CODEC.decode(_sample_frame() + b"\x00")
+
+
+def test_bad_magic_and_version_rejected():
+    frame = bytearray(_sample_frame())
+    bad = bytearray(frame)
+    bad[0] = 0x00
+    with pytest.raises(CodecError):
+        CODEC.decode(bytes(bad))
+    bad = bytearray(frame)
+    bad[3] = 99                                   # future codec version
+    with pytest.raises(CodecError):
+        CODEC.decode(bytes(bad))
+
+
+def test_unknown_type_id_rejected():
+    import zlib
+    frame = bytearray(_sample_frame())
+    body = bytearray(frame[PRELUDE.size:])
+    body[0] = 200                                 # unregistered type id
+    _, _, hlen, plen, _ = PRELUDE.unpack_from(bytes(frame))
+    crc = zlib.crc32(bytes(body)) & 0xFFFFFFFF
+    with pytest.raises(CodecError):
+        CODEC.decode(PRELUDE.pack(b"EFM", 1, hlen, plen, crc) + bytes(body))
+
+
+def test_drift_guard_matches_meter_for_every_tag():
+    """One live frame per data-plane tag: encoded payload length ==
+    wire_bytes() == what a CommMeter would account."""
+    frames = [
+        msg.ZShare("B1", "C", _rand_r64((8,), 0)),
+        msg.YShare("C", "B1", _rand_r64((8,), 1)),
+        msg.EzShare("B2", "C", _rand_r64((8,), 2)),
+        msg.BeaverOpen("C", "B1", _rand_r64((2, 8), 3), n_elems=16),
+        msg.UnmaskedShare("C", "B1", _rand_r64((3,), 4)),
+        msg.LossShare("B1", "C", _rand_r64((), 5), n_elems=1),
+        msg.WxShare("B1", "C", np.ones(4), n_elems=4),
+        msg.EncD("C", "B1", _rand_r64((8,), 6), n_cts=8, key_bits=256,
+                 key_owner="C"),
+        msg.EncDBroadcast("C", "B2", _rand_r64((8,), 7), n_cts=8,
+                          key_bits=256, key_owner="C"),
+        msg.MaskedGrad("B2", "C", _rand_r64((3,), 8), n_cts=3,
+                       key_bits=256, key_owner="C"),
+        msg.Flag("C", "B1", stop=False),
+    ]
+    seen = set()
+    for m in frames:
+        f = CODEC.encode(m)
+        assert _payload_len(f) == m.wire_bytes(), m.tag
+        seen.add(m.tag)
+    assert seen == set(msg.TAG_PROTOCOL)

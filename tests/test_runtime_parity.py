@@ -314,6 +314,109 @@ def test_pipelined_random_cp_deterministic():
         np.testing.assert_array_equal(a.weights[name], b.weights[name])
 
 
+# ---------------------------------------------------------------------------
+# Socket transport: real OS processes over TCP, bit-identical to local
+# ---------------------------------------------------------------------------
+
+def _assert_socket_exact(res, ref):
+    """Socket run vs in-process reference: losses, weights, per-tag
+    analytic bytes — AND the measured (actually framed) payload bytes
+    must equal the analytic accounting tag-for-tag."""
+    assert res.losses == ref.losses
+    for name in ref.weights:
+        np.testing.assert_array_equal(res.weights[name], ref.weights[name])
+    assert dict(res.meter.by_tag) == dict(ref.meter.by_tag)
+    assert res.meter.total_bytes == ref.meter.total_bytes
+    assert res.n_iter == ref.n_iter
+    assert dict(res.measured_meter.by_tag) == dict(res.meter.by_tag)
+    assert res.wire_overhead_bytes > 0          # headers exist, unmetered
+
+
+def test_socket_parity_k2_mock():
+    """Tentpole invariant: k=2 training across real OS processes over
+    SocketTransport is bit-identical to LocalTransport."""
+    from repro.launch.cluster import train_vfl_socket
+    X, y = synthetic.credit_default(n=200, d=8, seed=3)
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=3, batch_size=64,
+                    he_backend="mock", tol=0.0, seed=11)
+    parties = _make_parties(X, 2)
+    local = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    res = train_vfl_socket(parties, y, cfg)
+    _assert_socket_exact(res, local)
+
+
+def test_socket_parity_k4_poisson_mock():
+    """k=4 with the order-sensitive e^z chaining: the chained Beaver
+    products run as per-CP legs with real `beaver_open` frames and must
+    still match the local pair evaluation bit-for-bit."""
+    from repro.launch.cluster import train_vfl_socket
+    X, y = synthetic.dvisits(n=200, seed=7)
+    cfg = VFLConfig(glm="poisson", lr=0.05, max_iter=2, batch_size=48,
+                    he_backend="mock", tol=0.0, seed=5)
+    parties = _make_parties(X, 4)
+    local = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    res = train_vfl_socket(parties, y, cfg)
+    _assert_socket_exact(res, local)
+
+
+def test_socket_early_stop_and_random_cp():
+    """The conductor's stop decision mirrors C's flag (early-stop parity)
+    and random CP selection follows the dedicated-stream trajectory the
+    PipelinedTransport established."""
+    from repro.launch.cluster import train_vfl_socket
+    X, y = synthetic.credit_default(n=300, seed=15)
+    cfg = VFLConfig(glm="logistic", lr=0.0, max_iter=10, batch_size=128,
+                    he_backend="mock", tol=1e-3, seed=5)
+    parties = _make_parties(X, 2)
+    local = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    res = train_vfl_socket(parties, y, cfg)
+    _assert_socket_exact(res, local)
+    assert res.n_iter == 2
+    # random CP: same trajectory as the pipelined transport (seed+90002)
+    X, y = synthetic.credit_default(n=200, d=8, seed=2)
+    cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=2, batch_size=64,
+                    he_backend="mock", tol=0.0, seed=6,
+                    cp_selection="random")
+    parties = _make_parties(X, 3)
+    piped = trainer.train_vfl(parties, y, cfg,
+                              transport=PipelinedTransport())
+    res = train_vfl_socket(parties, y, cfg)
+    _assert_socket_exact(res, piped)
+
+
+@pytest.mark.slow
+def test_socket_parity_k4_paillier_poisson():
+    """Real Paillier over the wire: ciphertexts cross process boundaries
+    in canonical Z_{n²} packing (Montgomery → canonical → Montgomery),
+    each party holds only its own private key, and the model is still
+    bit-identical to the single-process run."""
+    from repro.launch.cluster import train_vfl_socket
+    X, y = synthetic.dvisits(n=120, seed=19)
+    cfg = VFLConfig(glm="poisson", lr=0.05, max_iter=2, batch_size=32,
+                    he_backend="paillier", key_bits=192, tol=0.0, seed=17)
+    parties = _make_parties(X, 4)
+    local = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    res = train_vfl_socket(parties, y, cfg)
+    _assert_socket_exact(res, local)
+
+
+def test_socket_scoring_matches_local_serving():
+    """The serving path over sockets (score shares as `infer.wx_share`
+    frames through the party mesh) matches TrainResult.predict_wx."""
+    from repro.core import glm as glm_lib
+    from repro.launch.cluster import SocketCluster
+    X, y = synthetic.credit_default(n=200, d=9, seed=5)
+    cfg = VFLConfig(glm="logistic", lr=0.2, max_iter=2, batch_size=64,
+                    he_backend="mock", tol=0.0, seed=1)
+    parties = _make_parties(X, 3)
+    local = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    with SocketCluster(parties, y, cfg) as cl:
+        cl.train()
+        preds = cl.score({p.name: p.X[:10] for p in parties})
+    wx = sum(p.X[:10] @ local.weights[p.name] for p in parties)
+    np.testing.assert_allclose(preds, glm_lib.GLMS["logistic"].predict(wx))
+
+
 def test_runtime_predict_share_matches_trainresult():
     """The actor inference path (Party.predict_share) reproduces
     TrainResult.predict_wx."""

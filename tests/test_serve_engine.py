@@ -86,3 +86,37 @@ def test_vfl_scoring_engine_matches_predict_wx():
     # serving traffic was metered at the transport boundary
     assert eng.transport.meter.by_tag["infer.wx_share"] == n_req * 2 * 8
     assert eng.transport.rounds > 0
+
+
+def test_vfl_scoring_engine_over_socket_cluster():
+    """Distributed serving: the same engine API backed by real party
+    processes — feature slices fan out as control frames, score shares
+    travel party→C over the TCP mesh as encoded `infer.wx_share`
+    frames."""
+    from repro.core import glm as glm_lib
+    from repro.core import trainer
+    from repro.core.trainer import PartyData, VFLConfig
+    from repro.data import synthetic, vertical
+    from repro.launch.cluster import SocketCluster
+    from repro.serve import VFLScoringEngine
+
+    X, y = synthetic.credit_default(n=200, d=9, seed=21)
+    parts = vertical.split_columns(X, 3)
+    names = ["C", "B1", "B2"]
+    parties = [PartyData(nm, p) for nm, p in zip(names, parts)]
+    cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=2, batch_size=64,
+                    he_backend="mock", tol=0.0, seed=13)
+    local = trainer.train_vfl(parties, y, cfg)
+    with SocketCluster(parties, y, cfg) as cl:
+        cl.train()
+        eng = VFLScoringEngine(cluster=cl, max_batch=16)
+        n_req = 40                               # > 2 micro-batches
+        for i in range(n_req):
+            eng.submit({nm: part[i] for nm, part in zip(names, parts)})
+        done = eng.run()
+    assert len(done) == n_req
+    got = np.array([r.prediction
+                    for r in sorted(done, key=lambda r: r.rid)])
+    want = glm_lib.GLMS["logistic"].predict(
+        local.predict_wx(parties))[:n_req]
+    np.testing.assert_allclose(got, want, rtol=1e-12)
