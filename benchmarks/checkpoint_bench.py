@@ -1,0 +1,151 @@
+"""Checkpoint bench: TrainState save/restore latency and on-disk bytes
+vs party count and key size.
+
+Measures the resumable-session hot path (`runtime/session.py` +
+`checkpoint/manager.py`): capture a live `VFLScheduler` TrainState after
+one iteration, then time
+
+  * `save`    — serialize + fsync + atomic rename + manifest (durable),
+  * `restore` — manifest parse + sha256 verify + npz load + rebuild,
+
+and record the archive + manifest bytes.  Rows sweep k ∈ {2,4,8} (mock
+backend — state size is key-independent there) and key size for the
+wire-relevant sizes (state size is key-INdependent by design: no
+ciphertext, share, or key material is ever checkpointed — the row pair
+proves it).  `benchmarks.run --only checkpoint` prints CSV rows and
+(full mode) writes `BENCH_checkpoint.json`; `--smoke` runs tiny shapes
+in CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.trainer import PartyData, VFLConfig
+from repro.data import synthetic, vertical
+from repro.runtime import VFLScheduler
+from repro.runtime import session
+from repro.runtime.session import TrainState
+
+
+def _time(fn, reps: int) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _disk_bytes(directory: str, step: int) -> int:
+    return sum(os.path.getsize(os.path.join(directory, f"step_{step}{ext}"))
+               for ext in (".npz", ".json"))
+
+
+def _state_for(k: int, key_bits: int, he: str, n: int, batch: int,
+               iters: int) -> tuple[TrainState, list[str], VFLConfig]:
+    X, y = synthetic.credit_default(n=n, d=4 * k, seed=3)
+    parts = vertical.split_columns(X, k)
+    names = ["C"] + [f"B{i}" for i in range(1, k)]
+    parties = [PartyData(nm, p) for nm, p in zip(names, parts)]
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=iters,
+                    batch_size=batch, he_backend=he, key_bits=key_bits,
+                    tol=0.0, seed=7)
+    sched = VFLScheduler(parties, y, cfg)
+    state = sched.init_state()
+    for _ in range(iters):
+        state = sched.step(state)
+    return state, names, cfg
+
+
+def run(smoke: bool = False) -> list[dict]:
+    n = 96 if smoke else 512
+    batch = 32 if smoke else 128
+    iters = 1 if smoke else 2
+    reps = 2 if smoke else 10
+    ks = (2, 4) if smoke else (2, 4, 8)
+    key_sweeps = ((2, 192),) if smoke else ((2, 192), (2, 512), (2, 1024))
+    rows: list[dict] = []
+
+    def bench(state: TrainState, names: list[str], cfg: VFLConfig,
+              label: str) -> None:
+        tree, extra = state.to_checkpoint()
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=reps + 2,
+                                    config_hash=session.config_hash(cfg),
+                                    codec_version=session.CODEC_VERSION)
+            step_box = [0]
+
+            def save():
+                step_box[0] += 1
+                mgr.save(step_box[0], tree, extra)
+
+            save_us = _time(save, reps)
+            nbytes = _disk_bytes(d, step_box[0])
+            template = TrainState.tree_template(names)
+
+            def restore():
+                got = mgr.restore(template)
+                assert got is not None
+                TrainState.from_checkpoint(got[1], got[2])
+
+            restore_us = _time(restore, reps)
+        rows.append({
+            "name": f"checkpoint.{label}",
+            "us": round(save_us, 1),
+            "save_us": round(save_us, 1),
+            "restore_us": round(restore_us, 1),
+            "bytes_on_disk": nbytes,
+            "parties": len(names),
+            "key_bits": cfg.key_bits,
+            "he_backend": cfg.he_backend,
+            "reps": reps,
+            "derived": f"restore_us={restore_us:.1f};bytes={nbytes};"
+                       f"k={len(names)};key_bits={cfg.key_bits}",
+        })
+
+    for k in ks:                                   # state size vs k
+        state, names, cfg = _state_for(k, 256, "mock", n, batch, iters)
+        bench(state, names, cfg, f"mock.k{k}")
+    for k, kb in key_sweeps:                       # state size vs key size
+        # mock backend at varying key_bits: proves the checkpoint carries
+        # no ciphertext/key material (bytes must NOT scale with the key)
+        state, names, cfg = _state_for(k, kb, "mock", n, batch, iters)
+        bench(state, names, cfg, f"mock.k{k}.kb{kb}")
+    if not smoke:                                  # real-backend reference
+        state, names, cfg = _state_for(2, 192, "paillier", 128, 32, 1)
+        bench(state, names, cfg, "paillier.k2.kb192")
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_checkpoint.json here (full mode)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+    if args.out and not args.smoke:
+        import jax
+        report = {
+            "schema": "bench_checkpoint/v1",
+            "jax": jax.__version__,
+            "rows": [{k: v for k, v in r.items() if k != "derived"}
+                     for r in rows],
+        }
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ import time
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 BENCH_CRYPTO_PATH = REPO_ROOT / "BENCH_crypto.json"
 BENCH_WIRE_PATH = REPO_ROOT / "BENCH_wire.json"
+BENCH_CHECKPOINT_PATH = REPO_ROOT / "BENCH_checkpoint.json"
 
 
 def _csv(name: str, us: float, derived: str = "") -> None:
@@ -132,6 +133,28 @@ def bench_wire(_: bool, smoke: bool = False) -> None:
     print(f"# wrote {BENCH_WIRE_PATH}")
 
 
+def bench_checkpoint(_: bool, smoke: bool = False) -> None:
+    """TrainState save/restore latency + bytes vs k and key size; full
+    mode writes BENCH_checkpoint.json."""
+    import jax
+
+    from benchmarks import checkpoint_bench
+    rows = checkpoint_bench.run(smoke=smoke)
+    for r in rows:
+        _csv(r["name"], r["us"], r["derived"])
+    if smoke:
+        print(f"# smoke mode: {BENCH_CHECKPOINT_PATH.name} not written")
+        return
+    report = {
+        "schema": "bench_checkpoint/v1",
+        "jax": jax.__version__,
+        "rows": [{k: v for k, v in r.items() if k != "derived"}
+                 for r in rows],
+    }
+    BENCH_CHECKPOINT_PATH.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"# wrote {BENCH_CHECKPOINT_PATH}")
+
+
 def bench_roofline(_: bool) -> None:
     from benchmarks import roofline
     rows = roofline.run()
@@ -157,6 +180,7 @@ BENCHES = {
     "fig2_scaling": bench_fig2,
     "kernels": bench_kernels,
     "wire": bench_wire,
+    "checkpoint": bench_checkpoint,
     "roofline": bench_roofline,
 }
 
@@ -174,7 +198,7 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         try:
-            if name in ("kernels", "wire"):
+            if name in ("kernels", "wire", "checkpoint"):
                 fn(args.paper, smoke=args.smoke)
             else:
                 fn(args.paper)

@@ -1,0 +1,100 @@
+"""Resumable EFMVFL training: kill -9 a party mid-run, recover, verify.
+
+Demonstrates the full crash-recovery story on the real wire
+(docs/fault_tolerance.md):
+
+  1. trains a k-party socket cluster with party-local checkpoints
+     (`cfg.checkpoint_every` iterations; each party persists only ITS
+     OWN TrainState slice — weights, stream cursors, meters — never a
+     share or key material),
+  2. SIGKILLs one party mid-run (`--kill-at/--kill-party`), letting the
+     supervisor (`launch.cluster.train_vfl_socket_resilient`) detect the
+     loss, force-restart the cluster, and run the resume handshake (all
+     parties agree on the max common checkpointed step, roll back,
+     audit the replicated stream counters),
+  3. verifies the recovered run is BIT-IDENTICAL to an uninterrupted
+     single-process run: losses, final weights, per-tag analytic comm
+     bytes, and measured-on-the-wire payload bytes.
+
+  PYTHONPATH=src python examples/resumable_training.py [--smoke]
+      [--parties 3] [--glm logistic] [--he mock|paillier]
+      [--kill-at 2] [--kill-party B1] [--checkpoint-every 1]
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.core import trainer
+from repro.core.trainer import PartyData, VFLConfig
+from repro.data import synthetic, vertical
+from repro.launch.cluster import train_vfl_socket_resilient
+from repro.runtime import LocalTransport
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--parties", type=int, default=3)
+    ap.add_argument("--glm", default="logistic",
+                    choices=("logistic", "poisson"))
+    ap.add_argument("--he", default="mock", choices=("mock", "paillier"))
+    ap.add_argument("--key-bits", type=int, default=256)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--kill-at", type=int, default=2,
+                    help="iteration at which to SIGKILL a party")
+    ap.add_argument("--kill-party", default="B1")
+    ap.add_argument("--checkpoint-every", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="default: a fresh temporary directory")
+    args = ap.parse_args()
+
+    n = 160 if args.smoke else 400
+    iters = args.iters or (3 if args.smoke else 5)
+    if args.glm == "poisson":
+        X, y = synthetic.dvisits(n=n, seed=7)
+    else:
+        X, y = synthetic.credit_default(n=n, d=12, seed=3)
+    parts = vertical.split_columns(X, args.parties)
+    names = ["C"] + [f"B{i}" for i in range(1, args.parties)]
+    parties = [PartyData(nm, p) for nm, p in zip(names, parts)]
+    cfg = VFLConfig(glm=args.glm, lr=0.1, max_iter=iters,
+                    batch_size=min(64, n // 2), he_backend=args.he,
+                    key_bits=args.key_bits, tol=0.0, seed=11,
+                    checkpoint_every=args.checkpoint_every)
+    assert args.kill_party in names[1:] + ["C"]
+    assert 0 < args.kill_at < iters, "kill must land mid-run"
+
+    print(f"reference: uninterrupted single-process run "
+          f"({args.glm}, k={args.parties}, {args.he})…")
+    ref = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+
+    ckpt_dir = args.checkpoint_dir or tempfile.mkdtemp(
+        prefix="efmvfl-resume-")
+    print(f"supervised socket run: checkpoint_every="
+          f"{args.checkpoint_every} -> {ckpt_dir}")
+    print(f"  kill plan: SIGKILL {args.kill_party} at iteration "
+          f"{args.kill_at}")
+    res = train_vfl_socket_resilient(
+        parties, y, cfg, checkpoint_dir=ckpt_dir,
+        kill_plan={args.kill_at: args.kill_party})
+
+    print(f"  restarts        : {res.restarts}")
+    print(f"  resumed at step : {res.resume_report.get('step')}")
+    print(f"  dealer draws    : {res.resume_report.get('dealer_drawn')} "
+          "(audited equal across parties)")
+    print(f"  per-party rng   : {res.resume_report.get('rng_drawn')}")
+
+    assert res.restarts >= 1, "the kill must have triggered a restart"
+    assert res.losses == ref.losses, "loss trace diverged"
+    for nm in ref.weights:
+        np.testing.assert_array_equal(res.weights[nm], ref.weights[nm])
+    assert dict(res.meter.by_tag) == dict(ref.meter.by_tag)
+    assert dict(res.measured_meter.by_tag) == dict(ref.meter.by_tag)
+    print("recovered run is bit-identical to the uninterrupted run "
+          "(losses, weights, analytic AND measured per-tag bytes) ✓")
+    print(f"losses: {[round(v, 4) for v in res.losses]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,4 +33,12 @@ python -m benchmarks.fig2_scaling --smoke >/dev/null
 python -m benchmarks.run --only wire --smoke >/dev/null
 python examples/distributed_training.py --smoke >/dev/null
 
+# Resume smoke: checkpoint save/restore latency rows must produce, and
+# a mock socket run killed mid-iteration (SIGKILL) must resume from
+# party-local checkpoints bit-identically (examples/resumable_training
+# asserts losses/weights/analytic+measured bytes).  The full coverage
+# is tests/test_resumable.py in the tier-1 sweep below.
+python -m benchmarks.run --only checkpoint --smoke >/dev/null
+python examples/resumable_training.py --smoke >/dev/null
+
 exec python -m pytest -x -q "$@"

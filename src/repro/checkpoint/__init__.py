@@ -1,4 +1,7 @@
 """Fault-tolerant checkpointing."""
-from repro.checkpoint.manager import CheckpointManager, load_checkpoint
+from repro.checkpoint.manager import (CheckpointManager, CheckpointMismatch,
+                                      load_checkpoint, save_checkpoint,
+                                      valid_steps)
 
-__all__ = ["CheckpointManager", "load_checkpoint"]
+__all__ = ["CheckpointManager", "CheckpointMismatch", "load_checkpoint",
+           "save_checkpoint", "valid_steps"]

@@ -3,13 +3,25 @@ safety at cluster scale).
 
 Layout per step:
   <dir>/step_<n>.npz       — flattened pytree leaves (numpy archive)
-  <dir>/step_<n>.json      — manifest: step, keys, treedef repr, sha256
+  <dir>/step_<n>.json      — manifest: step, keys, treedef repr, sha256,
+                             optional config/codec compatibility hashes
 
-Write protocol: tmp file + fsync + atomic rename, manifest LAST — a crash
-mid-write can never leave a manifest pointing at a torn archive.  Restore
-takes the newest manifest whose hash verifies (corrupt/partial tails are
-skipped).  `save_async` offloads serialization to a worker thread so the
-step loop never blocks on I/O (orbax-style).
+Write protocol: tmp file + fsync + atomic rename + directory fsync,
+manifest LAST — a crash mid-write can never leave a manifest pointing at
+a torn archive, and the rename itself is durable before the manifest
+appears.  Restore takes the newest manifest whose JSON parses (torn
+manifests are detected and skipped), whose schema is complete, and whose
+archive hash verifies.  `save_async` offloads serialization to a worker
+thread so the step loop never blocks on I/O (orbax-style).
+
+Compatibility refusal: a manifest may carry `config_hash` (semantic
+run-config fingerprint) and `codec_version` (wire-format version).  A
+load that passes the matching `expect_*` values REFUSES — raises
+`CheckpointMismatch` with both values spelled out — rather than silently
+resuming a run whose recovered streams would diverge.  Torn/corrupt
+checkpoints are *skipped* (fall back to an older valid step); mismatched
+ones are *refused* (the operator pointed a different run at this
+directory — falling back would hide the operator error).
 """
 from __future__ import annotations
 
@@ -23,6 +35,11 @@ import jax
 import numpy as np
 
 
+class CheckpointMismatch(RuntimeError):
+    """A valid checkpoint exists but belongs to an incompatible run
+    (config or codec-version hash differs) — resume refused."""
+
+
 try:
     import ml_dtypes
     _EXT_DTYPES = {
@@ -32,6 +49,11 @@ try:
     }
 except ImportError:      # pragma: no cover
     _EXT_DTYPES = {}
+
+#: manifest keys a readable checkpoint must carry — a parsed-but-partial
+#: manifest (e.g. truncated then padded by a broken filesystem) is torn.
+_REQUIRED_MANIFEST_KEYS = ("step", "n_leaves", "dtypes", "treedef",
+                           "sha256")
 
 
 def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], list[str], str]:
@@ -62,8 +84,25 @@ def _sha256(path: str) -> str:
     return h.hexdigest()
 
 
+def _fsync_dir(directory: str) -> None:
+    """Make a completed rename durable (POSIX: the rename lives in the
+    directory entry, which has its own write-back)."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:          # platform without directory fds
+        return
+    try:
+        os.fsync(fd)
+    except OSError:          # pragma: no cover — fsync unsupported here
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(directory: str, step: int, tree: Any,
-                    extra: dict | None = None) -> str:
+                    extra: dict | None = None,
+                    config_hash: str | None = None,
+                    codec_version: int | None = None) -> str:
     os.makedirs(directory, exist_ok=True)
     flat, dtypes, treedef = _flatten(tree)
     base = os.path.join(directory, f"step_{step}")
@@ -73,6 +112,7 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         f.flush()
         os.fsync(f.fileno())
     os.rename(tmp, base + ".npz")
+    _fsync_dir(directory)
     manifest = {
         "step": step,
         "n_leaves": len(flat),
@@ -81,34 +121,112 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         "sha256": _sha256(base + ".npz"),
         "extra": extra or {},
     }
+    if config_hash is not None:
+        manifest["config_hash"] = config_hash
+    if codec_version is not None:
+        manifest["codec_version"] = int(codec_version)
     mtmp = f"{base}.json.tmp.{os.getpid()}.{threading.get_ident()}"
     with open(mtmp, "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
     os.rename(mtmp, base + ".json")
+    _fsync_dir(directory)
     return base
 
 
+def _read_manifest(path: str) -> dict | None:
+    """Parse one manifest; None for torn/partial manifests (truncated
+    JSON, missing required keys) — callers skip those."""
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if not isinstance(manifest, dict) or \
+            any(k not in manifest for k in _REQUIRED_MANIFEST_KEYS):
+        return None
+    return manifest
+
+
+def check_compat(manifest: dict, expect_config_hash: str | None,
+                 expect_codec_version: int | None) -> None:
+    """Refuse (raise `CheckpointMismatch`) when the caller expects a
+    config/codec fingerprint and the manifest's differs or is absent."""
+    if expect_config_hash is not None:
+        got = manifest.get("config_hash")
+        if got != expect_config_hash:
+            raise CheckpointMismatch(
+                f"checkpoint step {manifest.get('step')}: config hash "
+                f"{got!r} != this run's {expect_config_hash!r} — the "
+                "checkpoint belongs to a different run configuration; "
+                "resume refused (use a fresh --checkpoint-dir or the "
+                "original config)")
+    if expect_codec_version is not None:
+        got = manifest.get("codec_version")
+        if got != int(expect_codec_version):
+            raise CheckpointMismatch(
+                f"checkpoint step {manifest.get('step')}: codec version "
+                f"{got!r} != this build's {expect_codec_version!r} — "
+                "serialized stream state is not portable across codec "
+                "versions; resume refused")
+
+
+def _manifest_files(directory: str) -> list[str]:
+    return sorted(
+        (f for f in os.listdir(directory)
+         if f.startswith("step_") and f.endswith(".json")),
+        key=lambda f: int(f.split("_")[1].split(".")[0]), reverse=True)
+
+
+def valid_steps(directory: str,
+                expect_config_hash: str | None = None,
+                expect_codec_version: int | None = None) -> list[int]:
+    """Steps whose manifest parses, matches the expected fingerprints,
+    and whose archive hash verifies — the set a resume handshake may
+    offer.  Ascending.  Torn entries are skipped; fingerprint mismatches
+    raise `CheckpointMismatch` (refusal, not fallback)."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for mf in _manifest_files(directory):
+        base = os.path.join(directory, mf[:-5])
+        manifest = _read_manifest(base + ".json")
+        if manifest is None:
+            continue
+        check_compat(manifest, expect_config_hash, expect_codec_version)
+        try:
+            if _sha256(base + ".npz") != manifest["sha256"]:
+                continue
+        except OSError:
+            continue
+        steps.append(int(manifest["step"]))
+    return sorted(steps)
+
+
 def load_checkpoint(directory: str, template: Any,
-                    step: int | None = None) -> tuple[int, Any, dict] | None:
+                    step: int | None = None,
+                    expect_config_hash: str | None = None,
+                    expect_codec_version: int | None = None
+                    ) -> tuple[int, Any, dict] | None:
     """Restore the newest (or given) valid checkpoint into the structure
-    of `template`.  Returns (step, tree, extra) or None."""
+    of `template`.  Returns (step, tree, extra) or None.  Torn archives
+    and torn manifests are skipped (older steps tried next);
+    config/codec fingerprint mismatches raise `CheckpointMismatch`."""
     if not os.path.isdir(directory):
         return None
-    manifests = sorted(
-        (f for f in os.listdir(directory) if f.endswith(".json")),
-        key=lambda f: int(f.split("_")[1].split(".")[0]), reverse=True)
-    for mf in manifests:
+    for mf in _manifest_files(directory):
         s = int(mf.split("_")[1].split(".")[0])
         if step is not None and s != step:
             continue
         base = os.path.join(directory, mf[:-5])
+        manifest = _read_manifest(base + ".json")
+        if manifest is None:
+            continue                       # torn manifest — skip
+        check_compat(manifest, expect_config_hash, expect_codec_version)
         try:
-            with open(base + ".json") as f:
-                manifest = json.load(f)
             if _sha256(base + ".npz") != manifest["sha256"]:
-                continue                       # torn write — skip
+                continue                   # torn archive — skip
             data = np.load(base + ".npz")
             dtypes = manifest.get("dtypes") or [None] * manifest["n_leaves"]
             leaves = [_restore_leaf(data[f"leaf_{i}"], dtypes[i])
@@ -122,17 +240,32 @@ def load_checkpoint(directory: str, template: Any,
 
 
 class CheckpointManager:
-    """keep-N rotation + async save."""
+    """keep-N rotation + async save + compatibility fingerprints.
 
-    def __init__(self, directory: str, keep: int = 3):
+    Args:
+      directory: checkpoint root (one party/run per directory).
+      keep: number of newest steps retained by rotation.
+      config_hash / codec_version: when given, stamped into every saved
+        manifest and *required* to match on `restore`/`steps` — a
+        mismatched directory refuses with `CheckpointMismatch` instead
+        of silently resuming an incompatible run.
+    """
+
+    def __init__(self, directory: str, keep: int = 3,
+                 config_hash: str | None = None,
+                 codec_version: int | None = None):
         self.directory = directory
         self.keep = keep
+        self.config_hash = config_hash
+        self.codec_version = codec_version
         self._thread: threading.Thread | None = None
 
     def save(self, step: int, tree: Any, extra: dict | None = None) -> None:
         self.wait()                             # never race a pending async
         tree = jax.tree.map(np.asarray, tree)   # device→host snapshot
-        save_checkpoint(self.directory, step, tree, extra)
+        save_checkpoint(self.directory, step, tree, extra,
+                        config_hash=self.config_hash,
+                        codec_version=self.codec_version)
         self._gc()
 
     def save_async(self, step: int, tree: Any,
@@ -141,7 +274,10 @@ class CheckpointManager:
         tree = jax.tree.map(np.asarray, tree)   # snapshot BEFORE returning
         self._thread = threading.Thread(
             target=save_checkpoint,
-            args=(self.directory, step, tree, extra), daemon=True)
+            args=(self.directory, step, tree, extra),
+            kwargs={"config_hash": self.config_hash,
+                    "codec_version": self.codec_version},
+            daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
@@ -150,16 +286,26 @@ class CheckpointManager:
             self._thread = None
             self._gc()
 
-    def restore(self, template: Any):
+    def restore(self, template: Any, step: int | None = None):
         self.wait()
-        return load_checkpoint(self.directory, template)
+        return load_checkpoint(self.directory, template, step=step,
+                               expect_config_hash=self.config_hash,
+                               expect_codec_version=self.codec_version)
+
+    def steps(self) -> list[int]:
+        """Valid, compatible steps currently on disk (ascending)."""
+        self.wait()
+        return valid_steps(self.directory,
+                           expect_config_hash=self.config_hash,
+                           expect_codec_version=self.codec_version)
 
     def _gc(self) -> None:
         if not os.path.isdir(self.directory):
             return
         steps = sorted({int(f.split("_")[1].split(".")[0])
                         for f in os.listdir(self.directory)
-                        if f.endswith(".json")}, reverse=True)
+                        if f.startswith("step_") and f.endswith(".json")},
+                       reverse=True)
         for s in steps[self.keep:]:
             for ext in (".npz", ".json"):
                 try:

@@ -46,6 +46,9 @@ class VFLConfig:
                                       # | "pallas" (see crypto.engine)
     seed: int = 0
     record_every: int = 1
+    checkpoint_every: int = 0         # party-local checkpoint cadence in
+                                      # iterations (0 = off); operational,
+                                      # excluded from session.config_hash
 
 
 @dataclasses.dataclass

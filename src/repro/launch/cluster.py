@@ -14,6 +14,13 @@ selection — asserted by `tests/test_runtime_parity.py` — and the
 per-tag *measured* payload bytes (actual encoded frames) equal the
 analytic `wire_bytes()` accounting exactly.
 
+Crash recovery: with `checkpoint_dir` + `cfg.checkpoint_every`, every
+party durably checkpoints its own state slice, and
+`train_vfl_socket_resilient` supervises the run — on any party loss it
+force-restarts the cluster with `resume=True`, the resume handshake
+agrees on the max common checkpointed step, and training continues
+bit-identically (docs/fault_tolerance.md, tests/test_resumable.py).
+
 CLI (trains a synthetic run across real processes and prints the
 measured-vs-analytic wire table):
 
@@ -47,6 +54,16 @@ class ClusterError(RuntimeError):
     managed to ship one)."""
 
 
+class FatalClusterError(ClusterError):
+    """A deterministic refusal (e.g. `CheckpointMismatch`): restarting
+    cannot help, so the supervisor re-raises instead of relaunching."""
+
+
+#: remote exception types a restart can never fix — the party reports
+#: the type name in its `error` frame (`netparty.PartyServer.run`)
+NON_RETRYABLE_ERRORS = frozenset({"CheckpointMismatch"})
+
+
 class SocketCluster:
     """Handle on a running party cluster.
 
@@ -65,7 +82,8 @@ class SocketCluster:
     """
 
     def __init__(self, parties: Sequence, y: np.ndarray, cfg,
-                 host: str = "127.0.0.1", io_timeout: float = IO_TIMEOUT_S):
+                 host: str = "127.0.0.1", io_timeout: float = IO_TIMEOUT_S,
+                 checkpoint_dir: str | None = None, resume: bool = False):
         assert parties[0].name == "C", "parties[0] must be C"
         validate_key_bits(cfg, mask_bound_bits(cfg))   # fail before spawning
         self.parties = list(parties)
@@ -74,9 +92,16 @@ class SocketCluster:
         self.cfg = cfg
         self.host = host
         self.io_timeout = io_timeout
+        self.checkpoint_dir = checkpoint_dir
+        self.resume = resume
+        #: filled by the resume handshake: agreed step + audited per-party
+        #: stream counters (see docs/fault_tolerance.md)
+        self.resume_report: dict = {}
         self.procs: dict[str, mp.process.BaseProcess] = {}
         self.tp: SocketTransport | None = None
         self.n_iter = 0
+        self.start_it = 0
+        self._resume_stop = False
         self._started = False
 
     # -- lifecycle ----------------------------------------------------------
@@ -106,7 +131,7 @@ class SocketCluster:
             proc = ctx.Process(
                 target=netparty.run_party_server,
                 args=(p.name, np.asarray(p.X, np.float64), y, ready,
-                      self.host),
+                      self.host, self.checkpoint_dir),
                 name=f"vfl-party-{p.name}", daemon=True)
             proc.start()
             self.procs[p.name] = proc
@@ -132,7 +157,8 @@ class SocketCluster:
         for name in self.names:
             self.tp.send_control(msg.Control(
                 CONDUCTOR, name, kind="handshake",
-                payload={"roster": roster, "cfg": cfg_dict}))
+                payload={"roster": roster, "cfg": cfg_dict,
+                         "resume": bool(self.resume)}))
         if self.cfg.he_backend != "mock":
             anns = self._collect("pubkey")
             keys = {a.payload["name"]: a.payload["n"] for a in anns.values()}
@@ -140,29 +166,89 @@ class SocketCluster:
                 self.tp.send_control(msg.Control(
                     CONDUCTOR, name, kind="pubkeys",
                     payload={"keys": keys}))
-        self._collect("ready")
+        ready = self._collect("ready")
+        if self.resume:
+            self._resume_handshake(ready)
+        # conductor→party keep-alives: an idle party's event-queue timeout
+        # stays a genuine failure detector during long quiet phases
+        hb = min(self.io_timeout / 3.0, 30.0)
+        for name in self.names:
+            self.tp.start_heartbeat(name, hb)
 
-    def shutdown(self) -> None:
+    def _resume_handshake(self, ready: dict[str, msg.Control]) -> None:
+        """Agree on the max COMMON checkpointed step, roll every party
+        back to it, and audit the recovered stream positions: the
+        replicated counters (Beaver-dealer draws, batch cursor) must be
+        identical across all k parties or the resume is refused."""
+        sets = [set(int(s) for s in (m.payload or {}).get("ckpt_steps", []))
+                for m in ready.values()]
+        common = set.intersection(*sets) if sets else set()
+        step = max(common) if common else 0
+        for name in self.names:
+            self.tp.send_control(msg.Control(
+                CONDUCTOR, name, kind="resume",
+                payload={"step": int(step)}))
+        acks = self._collect("resume_ok")
+        replicated = {(int(a.payload["dealer_drawn"]),
+                       int(a.payload["cursor"]))
+                      for a in acks.values()}
+        if len(replicated) != 1:
+            detail = {n: {"dealer_drawn": a.payload["dealer_drawn"],
+                          "cursor": a.payload["cursor"]}
+                      for n, a in acks.items()}
+            raise ClusterError(
+                "resume refused: replicated stream positions disagree "
+                f"across parties after rollback to step {step}: {detail}")
+        self.start_it = int(step)
+        self._resume_stop = bool(acks["C"].payload.get("stop", False))
+        self.resume_report = {
+            "step": int(step),
+            "offered_steps": {n: sorted(int(s) for s in
+                                        (m.payload or {})
+                                        .get("ckpt_steps", []))
+                              for n, m in ready.items()},
+            "dealer_drawn": next(iter(replicated))[0],
+            "cursor": next(iter(replicated))[1],
+            "rng_drawn": {n: int(a.payload["rng_drawn"])
+                          for n, a in acks.items()},
+        }
+
+    def shutdown(self, force: bool = False) -> None:
+        """Tear the cluster down.  `force` skips the graceful
+        shutdown/bye exchange — the supervisor uses it after a party
+        loss, when surviving parties are wedged mid-protocol and the
+        only safe recovery is kill + relaunch + resume."""
         if self.tp is not None:
-            for name in self.names:
+            if not force:
+                for name in self.names:
+                    try:
+                        self.tp.send_control(msg.Control(CONDUCTOR, name,
+                                                         kind="shutdown"))
+                    except Exception:        # noqa: BLE001 — best effort
+                        pass
                 try:
-                    self.tp.send_control(msg.Control(CONDUCTOR, name,
-                                                     kind="shutdown"))
-                except Exception:            # noqa: BLE001 — best effort
+                    self._collect("bye", timeout=10.0)
+                except Exception:            # noqa: BLE001
                     pass
-            try:
-                self._collect("bye", timeout=10.0)
-            except Exception:                # noqa: BLE001
-                pass
             self.tp.close()
             self.tp = None
         for proc in self.procs.values():
+            if force and proc.is_alive():
+                proc.kill()
             proc.join(timeout=10.0)
             if proc.is_alive():
                 proc.terminate()
                 proc.join(timeout=5.0)
         self.procs.clear()
         self._started = False
+
+    def kill_party(self, name: str) -> None:
+        """SIGKILL one party process mid-run — failure injection for
+        crash-recovery tests and drills (the supervisor path must bring
+        the run back bit-identically from party-local checkpoints)."""
+        proc = self.procs[name]
+        proc.kill()
+        proc.join(timeout=5.0)
 
     # -- control-plane plumbing --------------------------------------------
     def _check_alive(self) -> None:
@@ -191,7 +277,10 @@ class SocketCluster:
                     f"conductor received protocol frame {m.tag!r} — "
                     "parties must never route data through the conductor")
             if m.kind == "error":
-                raise ClusterError(
+                cls = FatalClusterError \
+                    if m.payload.get("etype") in NON_RETRYABLE_ERRORS \
+                    else ClusterError
+                raise cls(
                     f"party {m.payload.get('party')} failed:\n"
                     f"{m.payload.get('traceback')}")
             if m.kind == "__closed__":
@@ -210,11 +299,22 @@ class SocketCluster:
             return (self.names[i[0]], self.names[i[1]])
         return (self.names[0], self.names[1])
 
-    def train(self):
+    def train(self, kill_plan: dict[int, str] | None = None):
         """Run Algorithm 1 to completion; returns `TrainResult` with two
         extra attributes: `measured_meter` (per-tag bytes actually framed
         on the wire) and `wire_overhead_bytes` (codec prelude+header
-        cost, excluded from the protocol meters)."""
+        cost, excluded from the protocol meters).
+
+        After a resume handshake, the loop continues from the agreed
+        common step: the conductor re-derives its CP-selection stream
+        position by replaying the draws of the already-completed
+        iterations (the conductor has no durable state of its own — all
+        durable state is party-local).
+
+        `kill_plan` maps iteration → party name; the conductor SIGKILLs
+        that party right after dispatching the iteration (one-shot:
+        entries are consumed), producing a genuine mid-iteration crash
+        for the supervisor to recover from."""
         from repro.core.trainer import TrainResult
         assert self._started, "call start() first"
         cfg = self.cfg
@@ -222,15 +322,19 @@ class SocketCluster:
         # concurrent mask draws can't exist here, but the trajectory
         # stays comparable across the concurrent transports)
         select_rng = seeds.cp_select_rng(cfg.seed)
+        for _ in range(self.start_it):          # replay completed draws
+            self._select_cps(select_rng)
         t0 = time.perf_counter()
-        stop = False
-        it = 0
+        stop = self._resume_stop
+        it = self.start_it
         while it < cfg.max_iter and not stop:
             cps = self._select_cps(select_rng)
             for name in self.names:
                 self.tp.send_control(msg.Control(
                     CONDUCTOR, name, kind="iter",
                     payload={"it": it, "cps": list(cps)}))
+            if kill_plan and it in kill_plan:
+                self.kill_party(kill_plan.pop(it))
             acks = self._collect("iter_done")
             stop = bool(acks["C"].payload["stop"])   # full loss trace comes
             it += 1                                  # with the fetch below
@@ -310,10 +414,69 @@ class SocketCluster:
 
 
 def train_vfl_socket(parties: Sequence, y: np.ndarray, cfg,
-                     host: str = "127.0.0.1"):
+                     host: str = "127.0.0.1",
+                     checkpoint_dir: str | None = None,
+                     resume: bool = False):
     """One-call distributed training: spawn, train, tear down."""
-    with SocketCluster(parties, y, cfg, host=host) as cl:
-        return cl.train()
+    with SocketCluster(parties, y, cfg, host=host,
+                       checkpoint_dir=checkpoint_dir, resume=resume) as cl:
+        res = cl.train()
+        res.resume_report = dict(cl.resume_report)
+        return res
+
+
+def train_vfl_socket_resilient(parties: Sequence, y: np.ndarray, cfg,
+                               checkpoint_dir: str,
+                               host: str = "127.0.0.1",
+                               max_restarts: int = 3,
+                               kill_plan: dict[int, str] | None = None):
+    """Supervised distributed training: survive party-process crashes.
+
+    Restart policy: on ANY cluster failure (party killed, wedged, or
+    errored) the supervisor force-kills the remaining party processes,
+    relaunches the full cluster with `resume=True`, and the resume
+    handshake rolls every party back to the max common checkpointed
+    step — mid-iteration state is deliberately NOT recovered (it is
+    never durable), so recovery is always roll-back-and-replay, which
+    keeps the trajectory bit-identical to an uninterrupted run
+    (tests/test_resumable.py).  `cfg.checkpoint_every` must be > 0 for
+    recovery to make progress; with it 0, every restart replays from
+    scratch.
+
+    Returns the final `TrainResult` with `res.restarts` (count) and
+    `res.resume_report` (last handshake audit) attached.  Raises the
+    final `ClusterError` after `max_restarts` consecutive failures.
+    """
+    attempt = 0
+    resume = False
+    while True:
+        cl = SocketCluster(parties, y, cfg, host=host,
+                           checkpoint_dir=checkpoint_dir, resume=resume)
+        try:
+            cl.start()
+            res = cl.train(kill_plan=kill_plan)
+            cl.shutdown()
+            res.restarts = attempt
+            res.resume_report = dict(cl.resume_report)
+            return res
+        except (ClusterError, OSError) as e:
+            cl.shutdown(force=True)
+            if isinstance(e, FatalClusterError):
+                # deterministic refusal (config/codec mismatch) —
+                # restarting replays the identical refusal; surface it
+                raise
+            # OSError covers the conductor's own send path dying on a
+            # lost party (PeerClosed/ConnectionError/TimeoutError are
+            # all OSError subclasses) — every transient loss restarts
+            attempt += 1
+            if attempt > max_restarts:
+                raise
+            resume = True
+        except BaseException:
+            # anything else (caller bug, KeyboardInterrupt) must not
+            # leak k live party processes
+            cl.shutdown(force=True)
+            raise
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,10 @@ iteration on the chosen runtime transport and reports its per-tag
 bytes next to the analytic `protocol_comm` table — with `socket` the
 bytes are counted off real encoded TCP frames between party processes
 (`runtime.codec` / `launch.cluster`), asserting the analytic table is
-what actually crosses the wire.
+what actually crosses the wire.  `--checkpoint-dir` (socket) enables
+party-local checkpoints in the measured run and reports the cadence;
+adding `--resume` runs the kill-and-resume drill and reports the
+`resume_verdict` (docs/fault_tolerance.md).
 """
 import os
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
@@ -183,7 +186,8 @@ def make_secure_grad_step(mesh, mod: Modulus, width: int, window: int = 1,
 
 
 def measured_comm(transport: str, features: int, key_bits: int,
-                  samples: int = 256) -> dict:
+                  samples: int = 256, checkpoint_dir: str | None = None,
+                  resume_drill: bool = False) -> dict:
     """One *measured* 2-party training iteration on a runtime transport.
 
     Mirrors the analytic `protocol_comm` shape (2 parties, `features`
@@ -194,6 +198,13 @@ def measured_comm(transport: str, features: int, key_bits: int,
     the run spans real OS processes and the bytes are measured off the
     encoded TCP frames (plus the frame-overhead total the analytic
     table deliberately excludes).
+
+    With `checkpoint_dir` (socket only) the run trains 2 iterations at
+    `checkpoint_every=1` and records the party-local checkpoint cadence;
+    `resume_drill` additionally SIGKILLs B1 mid-run, lets the supervisor
+    resume from the checkpoints, and reports whether the recovered run
+    is bit-identical to an uninterrupted single-process reference — the
+    `resume_verdict` column of the dry-run table.
     """
     import numpy as np
     from repro.core.trainer import PartyData, VFLConfig, train_vfl
@@ -206,24 +217,34 @@ def measured_comm(transport: str, features: int, key_bits: int,
     y = (rng.random(nb) < 0.5).astype(np.float64) * 2 - 1
     parties = [PartyData("C", X[:, :features]),
                PartyData("B1", X[:, features:])]
-    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=1, batch_size=nb,
-                    he_backend="mock", key_bits=key_bits, tol=0.0, seed=0)
+    checkpointing = checkpoint_dir is not None and transport == "socket"
+    n_iter = 2 if checkpointing else 1
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=n_iter, batch_size=nb,
+                    he_backend="mock", key_bits=key_bits, tol=0.0, seed=0,
+                    checkpoint_every=1 if checkpointing else 0)
     # a LIVE iteration needs a key that can carry its masked values; the
     # analytic lowering has no such floor (e.g. the documented 128-bit
     # compile check), so bump the measured run to the minimum viable key
     # and record it — the analytic comparison below uses the same size.
     key_bits = max(key_bits, min_key_bits(cfg))
     cfg.key_bits = key_bits
-    out = {"transport": transport, "iterations": 1, "batch": nb,
+    out = {"transport": transport, "iterations": n_iter, "batch": nb,
            "features_per_party": features, "key_bits": key_bits}
     if transport == "socket":
         # party processes must not inherit the 512 forced host devices
-        from repro.launch.cluster import train_vfl_socket
+        from repro.launch.cluster import (train_vfl_socket,
+                                          train_vfl_socket_resilient)
         saved = os.environ.get("XLA_FLAGS")
         os.environ["XLA_FLAGS"] = (saved or "").replace(
             "--xla_force_host_platform_device_count=512", "").strip()
         try:
-            res = train_vfl_socket(parties, y, cfg)
+            if checkpointing and resume_drill:
+                res = train_vfl_socket_resilient(
+                    parties, y, cfg, checkpoint_dir=checkpoint_dir,
+                    kill_plan={1: "B1"})
+            else:
+                res = train_vfl_socket(parties, y, cfg,
+                                       checkpoint_dir=checkpoint_dir)
         finally:
             if saved is not None:
                 os.environ["XLA_FLAGS"] = saved
@@ -231,6 +252,31 @@ def measured_comm(transport: str, features: int, key_bits: int,
             k: v / 1e6 for k, v in sorted(res.measured_meter.by_tag.items())}
         out["frame_overhead_mb"] = res.wire_overhead_bytes / 1e6
         measured = dict(res.measured_meter.by_tag)
+        if checkpointing:
+            from repro.checkpoint import valid_steps
+            from repro.runtime import session
+            ck = {"dir": checkpoint_dir, "every": cfg.checkpoint_every,
+                  "steps_on_disk": {
+                      p.name: valid_steps(
+                          os.path.join(checkpoint_dir,
+                                       f"party_{p.name}"),
+                          expect_config_hash=session.config_hash(cfg),
+                          expect_codec_version=session.CODEC_VERSION)
+                      for p in parties}}
+            if resume_drill:
+                ref = train_vfl(parties, y, cfg,
+                                transport=LocalTransport())
+                identical = (res.losses == ref.losses
+                             and dict(res.meter.by_tag)
+                             == dict(ref.meter.by_tag)
+                             and all(np.array_equal(res.weights[n],
+                                                    ref.weights[n])
+                                     for n in ref.weights))
+                ck.update(restarts=getattr(res, "restarts", 0),
+                          resume_step=res.resume_report.get("step"),
+                          resume_verdict=("bit_identical" if identical
+                                          else "DIVERGED"))
+            out["checkpoint"] = ck
     else:
         tp = {"local": LocalTransport,
               "pipelined": PipelinedTransport}[transport]()
@@ -240,7 +286,8 @@ def measured_comm(transport: str, features: int, key_bits: int,
         measured = dict(res.meter.by_tag)
     analytic, _ = msg_lib.iteration_traffic(
         n_parties=2, nb=nb, m_per_party=features, key_bits=key_bits)
-    out["matches_analytic"] = measured == analytic
+    out["matches_analytic"] = measured == {
+        k: v * res.n_iter for k, v in analytic.items()}
     return out
 
 
@@ -267,9 +314,23 @@ def main() -> None:
                          "this runtime transport (socket = real "
                          "processes over TCP) and report measured "
                          "per-tag bytes next to the analytic table")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="(socket transport) enable party-local "
+                         "checkpoints at every iteration in the "
+                         "measured run and report the cadence")
+    ap.add_argument("--resume", action="store_true",
+                    help="(with --checkpoint-dir) kill a party mid-run, "
+                         "resume via the supervisor, and report the "
+                         "resume verdict (bit_identical | DIVERGED)")
     ap.add_argument("--out", default="results/secure_dryrun.json")
     args = ap.parse_args()
 
+    if args.checkpoint_dir and args.transport != "socket":
+        raise SystemExit("--checkpoint-dir needs --transport socket "
+                         "(party-local checkpoints live in the party "
+                         "processes)")
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume needs --checkpoint-dir")
     try:
         dims = tuple(int(v) for v in args.mesh.lower().split("x"))
         assert len(dims) == 3 and all(d >= 1 for d in dims)
@@ -370,8 +431,10 @@ def main() -> None:
         "ok": True,
     }
     if args.transport != "none":
-        res["measured_comm"] = measured_comm(args.transport, m,
-                                             args.key_bits)
+        res["measured_comm"] = measured_comm(
+            args.transport, m, args.key_bits,
+            checkpoint_dir=args.checkpoint_dir,
+            resume_drill=args.resume)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1)

@@ -40,14 +40,30 @@ class TripleShares:
 
 
 class DealerTripleSource:
-    """Preprocessing-phase triples from a seeded dealer."""
+    """Preprocessing-phase triples from a seeded dealer.
+
+    `drawn` counts stream advances (one per `elementwise` draw or
+    `skip` unit) so replicated dealers can be audited for alignment;
+    `state()`/`set_state()` capture the exact stream position for
+    resumable sessions (`runtime.session.TrainState`)."""
 
     def __init__(self, seed: int = 0):
         self._key = jax.random.key(seed)
+        self.drawn = 0
 
     def _next_key(self):
+        self.drawn += 1
         self._key, sub = jax.random.split(self._key)
         return sub
+
+    def state(self) -> dict:
+        return {"key": np.asarray(jax.random.key_data(self._key)),
+                "drawn": int(self.drawn)}
+
+    def set_state(self, st: dict) -> None:
+        self._key = jax.random.wrap_key_data(
+            jnp.asarray(np.asarray(st["key"], np.uint32)))
+        self.drawn = int(st["drawn"])
 
     def skip(self, n: int) -> None:
         """Advance the triple stream by `n` draws without materializing

@@ -15,6 +15,7 @@ from repro.runtime.codec import Codec, CodecError
 from repro.runtime.party import CPState, DataParty, LabelParty, Party
 from repro.runtime.scheduler import (TransportDealer, VFLScheduler,
                                      mask_bound_bits, validate_key_bits)
+from repro.runtime.session import TrainState, config_hash
 from repro.runtime.transport import (LocalTransport, LockedRNG,
                                      PipelinedTransport, SocketTransport,
                                      Transport)
@@ -24,5 +25,5 @@ __all__ = [
     "VFLScheduler", "TransportDealer", "mask_bound_bits",
     "validate_key_bits", "Transport", "LocalTransport",
     "PipelinedTransport", "SocketTransport", "LockedRNG",
-    "Codec", "CodecError",
+    "Codec", "CodecError", "TrainState", "config_hash",
 ]

@@ -3,7 +3,16 @@
 `PartyServer` hosts exactly one `Party`/`LabelParty` actor in its own OS
 process and speaks nothing but codec frames (`runtime.codec`) over TCP:
 
-  bind → handshake → mesh → key exchange → iterate → serve → shutdown
+  bind → handshake → mesh → key exchange → [resume] → iterate → serve
+  → shutdown
+
+Durability.  With a checkpoint directory configured, the party persists
+its OWN `runtime.session.TrainState` slice (weights, stream cursors,
+meter ledgers — never a share, never key material) through
+`checkpoint.CheckpointManager` every `cfg.checkpoint_every` iterations,
+*before* acking `iter_done`; on a resume handshake it offers its valid
+steps, rolls back to the cluster-agreed common step, and reports its
+audited stream counters.  See docs/fault_tolerance.md.
 
 Topology.  Every party listens on a loopback/LAN port.  The conductor
 (`launch.cluster.SocketCluster`) connects to every party and drives the
@@ -61,8 +70,10 @@ import traceback
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import CheckpointManager
 from repro.core import glm as glm_lib
 from repro.core import protocols
 from repro.crypto import paillier, ring
@@ -72,6 +83,7 @@ from repro.mpc import beaver, pairwise
 from repro.runtime import codec as codec_lib
 from repro.runtime import messages as msg
 from repro.runtime import seeds as seeds_lib
+from repro.runtime import session as session_lib
 from repro.runtime.party import DataParty, LabelParty
 from repro.runtime.scheduler import mask_bound_bits, validate_key_bits
 from repro.runtime.transport import SocketTransport, recv_frame
@@ -93,7 +105,8 @@ class PartyServer:
 
     def __init__(self, name: str, X: np.ndarray,
                  y: Optional[np.ndarray] = None, host: str = "127.0.0.1",
-                 io_timeout: float = IO_TIMEOUT_S):
+                 io_timeout: float = IO_TIMEOUT_S,
+                 checkpoint_dir: Optional[str] = None):
         self.name = name
         self.X = np.asarray(X, np.float64)
         self.y = None if y is None else np.asarray(y, np.float64)
@@ -101,6 +114,14 @@ class PartyServer:
             raise ValueError("party C must hold the label vector")
         self.host = host
         self.io_timeout = io_timeout
+        # party-LOCAL durable state: each party checkpoints only its own
+        # TrainState slice under <dir>/party_<name>; shares and private
+        # key material never leave the process (keys are seed-derived and
+        # re-derived on resume — see docs/fault_tolerance.md)
+        self.checkpoint_dir = None if checkpoint_dir is None else \
+            os.path.join(checkpoint_dir, f"party_{name}")
+        self.ckpt: Optional[CheckpointManager] = None
+        self.resume = False
         self.backend = None
         self.actor = None
         self._p1_open = False
@@ -122,12 +143,15 @@ class PartyServer:
         conductor before the exception propagates (→ nonzero exit)."""
         try:
             self._run(ready_queue)
-        except Exception:
+        except Exception as e:
             tb = traceback.format_exc()
             try:
+                # etype lets the conductor separate deterministic
+                # refusals (never retried) from transient failures
                 self.tp.send_control(msg.Control(
                     self.name, CONDUCTOR, kind="error",
-                    payload={"party": self.name, "traceback": tb}))
+                    payload={"party": self.name, "traceback": tb,
+                             "etype": type(e).__name__}))
             except Exception:                    # noqa: BLE001
                 pass
             raise
@@ -174,7 +198,17 @@ class PartyServer:
             self.tp.attach(first.src, conn)
 
         self._setup_crypto()
-        self.tp.send_control(msg.Control(self.name, CONDUCTOR, kind="ready"))
+        if self.checkpoint_dir is not None:
+            self.ckpt = CheckpointManager(
+                self.checkpoint_dir,
+                config_hash=session_lib.config_hash(self.cfg),
+                codec_version=session_lib.CODEC_VERSION)
+        # offer this party's valid, config-compatible checkpoint steps to
+        # the conductor's resume handshake (CheckpointMismatch propagates
+        # as an `error` control frame — a mismatched resume is REFUSED)
+        steps = self.ckpt.steps() if (self.resume and self.ckpt) else []
+        self.tp.send_control(msg.Control(self.name, CONDUCTOR, kind="ready",
+                                         payload={"ckpt_steps": steps}))
         self._main_loop()
 
     def _accept(self):
@@ -188,6 +222,7 @@ class PartyServer:
         self.names = [r[0] for r in payload["roster"]]
         self.roster = {r[0]: (r[1], int(r[2])) for r in payload["roster"]}
         self.cfg = VFLConfig(**payload["cfg"])
+        self.resume = bool(payload.get("resume", False))
         cfg = self.cfg
         self.model = glm_lib.GLMS[cfg.glm]
         self.index = self.names.index(self.name)
@@ -243,12 +278,26 @@ class PartyServer:
 
     def _next_message(self) -> msg.Message:
         import queue
-        try:
-            return self.tp.inbound.get(timeout=self.io_timeout)
-        except queue.Empty:
-            raise TimeoutError(
-                f"{self.name}: no frame for {self.io_timeout}s "
-                "(lost conductor or peer?)") from None
+        import time
+        # ONE deadline for the whole wait: heartbeats are discarded
+        # WITHOUT extending it — they keep the link warm and give the
+        # conductor early dead-link detection, but only *protocol*
+        # progress may satisfy this waiter (a wedged-but-beating
+        # conductor must still trip the timeout, as it did before
+        # heartbeats existed)
+        deadline = time.monotonic() + self.io_timeout
+        while True:
+            try:
+                m = self.tp.inbound.get(
+                    timeout=max(deadline - time.monotonic(), 0.0))
+            except queue.Empty:
+                raise TimeoutError(
+                    f"{self.name}: no protocol frame for "
+                    f"{self.io_timeout}s (lost conductor or peer?)") \
+                    from None
+            if isinstance(m, msg.Control) and m.kind == "hb":
+                continue        # keep-alive only — never routed
+            return m
 
     def _route_data(self, m: msg.Message) -> None:
         """Deliver one protocol message, stashing the classes that must
@@ -309,6 +358,8 @@ class PartyServer:
             if c.kind == "iter":
                 self._run_iteration(int(c.payload["it"]),
                                     tuple(c.payload["cps"]))
+            elif c.kind == "resume":
+                self._run_resume(int(c.payload["step"]))
             elif c.kind == "score":
                 self._run_score(c.payload)
             elif c.kind == "fetch":
@@ -320,6 +371,90 @@ class PartyServer:
             else:
                 raise RuntimeError(f"{self.name}: unknown control "
                                    f"{c.kind!r}")
+
+    # ------------------------------------------------------------------
+    # resumable sessions: party-local TrainState slice
+    # ------------------------------------------------------------------
+
+    def _capture_state(self, it: int) -> session_lib.TrainState:
+        """This party's slice of the step-state machine (see
+        runtime/session.py): own weights + own stream positions + own
+        meter views.  Never includes another party's weights, any share,
+        or any private key material."""
+        tp = self.tp
+        return session_lib.TrainState(
+            it=int(it),
+            weights={self.name: np.array(self.actor.W, np.float64)},
+            losses=[float(v) for v in getattr(self.actor, "losses", [])],
+            stop=bool(self.actor.stop),
+            order=np.asarray(self.order, np.int64),
+            cursor=int(self.cursor),
+            batch_rng=seeds_lib.generator_state(self.batch_rng),
+            jkey=np.asarray(jax.random.key_data(self.jkey)),
+            protocol_rng=self.rng.state(),
+            select_rng=None,               # CP selection is conductor-owned
+            dealer=self.dealer.state(),
+            noise_pool_fill=0,             # no prefetch pool on this path
+            meter_sends=session_lib.LedgerView(tp.meter.sends),
+            rounds=int(tp.rounds),
+            runtime_s=0.0,
+            measured_sends=session_lib.LedgerView(tp.measured.sends),
+            overhead_bytes=int(tp.overhead_bytes),
+            frames_sent=int(tp.frames_sent))
+
+    def _restore_state(self, st: session_lib.TrainState) -> None:
+        """In-place restore: the HE backend's rng handle aliases
+        `self.rng`, so the mask/noise stream position propagates."""
+        self.actor.W = np.array(st.weights[self.name], np.float64)
+        self.actor.stop = bool(st.stop)
+        if self.name == "C":
+            self.actor.losses = [float(v) for v in st.losses]
+        seeds_lib.restore_generator(self.batch_rng, st.batch_rng)
+        self.order = np.asarray(st.order, np.int64)
+        self.cursor = int(st.cursor)
+        self.jkey = jax.random.wrap_key_data(
+            jnp.asarray(np.asarray(st.jkey, np.uint32)))
+        self.rng.set_state(st.protocol_rng)
+        self.dealer.set_state(st.dealer)
+        tp = self.tp
+        tp.meter = session_lib.rebuild_meter(st.meter_sends)
+        tp.measured = session_lib.rebuild_meter(st.measured_sends or [])
+        tp.overhead_bytes = int(st.overhead_bytes)
+        tp.frames_sent = int(st.frames_sent)
+        tp.rounds = int(st.rounds)
+
+    def _save_checkpoint(self, step: int) -> None:
+        tree, extra = self._capture_state(step).to_checkpoint()
+        self.ckpt.save(step, tree, extra)
+
+    def _run_resume(self, step: int) -> None:
+        """Roll back to the cluster-agreed common step (0 = fresh start)
+        and report the audited stream positions; the conductor asserts
+        the replicated counters (dealer draws, batch cursor, iteration)
+        agree across all k parties before training continues."""
+        if step > 0:
+            if self.ckpt is None:
+                raise RuntimeError(f"{self.name}: resume to step {step} "
+                                   "without a checkpoint directory")
+            got = self.ckpt.restore(
+                session_lib.TrainState.tree_template([self.name]),
+                step=step)
+            if got is None:
+                raise RuntimeError(
+                    f"{self.name}: agreed resume step {step} is missing "
+                    "or invalid in this party's checkpoint directory")
+            _, tree, extra = got
+            self._restore_state(
+                session_lib.TrainState.from_checkpoint(tree, extra))
+        audit = {"party": self.name, "step": int(step),
+                 "dealer_drawn": int(self.dealer.drawn),
+                 "cursor": int(self.cursor),
+                 "rng_drawn": int(self.rng.drawn())}
+        if self.name == "C":
+            audit.update(losses=[float(v) for v in self.actor.losses],
+                         stop=bool(self.actor.stop))
+        self.tp.send_control(msg.Control(self.name, CONDUCTOR,
+                                         kind="resume_ok", payload=audit))
 
     # ------------------------------------------------------------------
     # one Algorithm-1 iteration
@@ -429,6 +564,14 @@ class PartyServer:
         else:
             while party._pending_unmask or not self._flags_seen:
                 self._pump_one()
+        # durable checkpoint BEFORE the ack: once the conductor's barrier
+        # sees every party's iter_done for a cadence step, every party
+        # has the step on disk (a crash mid-save leaves a torn file the
+        # loader skips, so the previous cadence step wins the handshake)
+        step = it + 1
+        if self.ckpt is not None and self.cfg.checkpoint_every \
+                and step % self.cfg.checkpoint_every == 0:
+            self._save_checkpoint(step)
         done = {"it": it}
         if self.name == "C":
             done.update(loss=party.losses[-1], stop=bool(party.stop))
@@ -477,6 +620,8 @@ class PartyServer:
 
 
 def run_party_server(name: str, X, y, ready_queue,
-                     host: str = "127.0.0.1") -> None:
+                     host: str = "127.0.0.1",
+                     checkpoint_dir: str | None = None) -> None:
     """Spawn entry point (multiprocessing 'spawn' target)."""
-    PartyServer(name, X, y=y, host=host).run(ready_queue)
+    PartyServer(name, X, y=y, host=host,
+                checkpoint_dir=checkpoint_dir).run(ready_queue)

@@ -12,6 +12,13 @@ Protocols 1 and 4) is evaluated in-process over the CP pair's states —
 the same simulation convention as `mpc.beaver` — with the openings the
 parties would exchange accounted through the transport's dealer.
 
+Training is an explicit step-state machine: `step(state) -> state`
+advances one iteration over a `runtime.session.TrainState` (everything
+an iteration consumes — weights, every stream position, meters), and
+`run()` is a thin fold over `step`, so runs can be checkpointed and
+resumed bit-exactly, even into a fresh scheduler instance
+(tests/test_resumable.py; docs/fault_tolerance.md).
+
 With `LocalTransport` this replays the pre-refactor `train_vfl`
 simulation bit-for-bit (losses, weights, per-tag meter bytes — see
 tests/test_runtime_parity.py); `PipelinedTransport` overlaps the
@@ -31,6 +38,7 @@ import time
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import glm as glm_lib
@@ -39,6 +47,8 @@ from repro.mpc import beaver
 from repro.runtime import messages as msg
 from repro.runtime import seeds
 from repro.runtime.party import DataParty, LabelParty, Party
+from repro.runtime import session as session_lib
+from repro.runtime.session import TrainState, rebuild_meter
 from repro.runtime.transport import LocalTransport, Transport
 
 
@@ -160,6 +170,9 @@ class VFLScheduler:
         ex = getattr(self.transport, "executor", None)
         if ex is not None and hasattr(self.backend, "attach_noise_executor"):
             self.backend.attach_noise_executor(ex)
+        #: the TrainState the live objects currently embody (identity
+        #: check lets the fold skip the per-step restore)
+        self._live_state: TrainState | None = None
 
     @property
     def label_party(self) -> LabelParty:
@@ -299,26 +312,110 @@ class VFLScheduler:
         if hasattr(self.backend, "discard_pooled_noise"):
             self.backend.discard_pooled_noise()   # bound pool to one iter
 
+    # -- step-state machine -------------------------------------------------
+    # `run()` is a thin fold over `step()`: every iteration consumes and
+    # produces an explicit `session.TrainState`, so a run can be paused,
+    # checkpointed, and resumed (even in a FRESH scheduler instance)
+    # with a bit-identical trajectory — losses, weights, per-tag bytes.
+
+    def init_state(self) -> TrainState:
+        """State before iteration 0.  Draws the first epoch permutation
+        — the same first `batch_rng` draw the pre-refactor loop made."""
+        order = self.batch_rng.permutation(self.n_total)
+        return self._capture(it=0, order=order, cursor=0, runtime_s=0.0)
+
+    def _capture(self, it: int, order, cursor: int,
+                 runtime_s: float) -> TrainState:
+        be = self.backend
+        pool = 0
+        if hasattr(be, "_noise"):
+            pool = sum(len(q) for q in be._noise.values())
+        shared_select = self.select_rng is self.rng
+        state = TrainState(
+            it=int(it),
+            weights={p.name: np.array(p.W, np.float64)
+                     for p in self.parties},
+            losses=list(self.label_party.losses),
+            stop=bool(self.label_party.stop),
+            order=np.asarray(order, np.int64),
+            cursor=int(cursor),
+            batch_rng=seeds.generator_state(self.batch_rng),
+            jkey=np.asarray(jax.random.key_data(self.jkey)),
+            protocol_rng=self.rng.state(),
+            select_rng=None if shared_select else self.select_rng.state(),
+            dealer=self.dealer.state(),
+            noise_pool_fill=pool,
+            # O(1) prefix view of the append-only ledger — rows are
+            # materialized only at serialization time (session.send_rows)
+            meter_sends=session_lib.LedgerView(self.transport.meter.sends),
+            rounds=int(self.transport.rounds),
+            runtime_s=float(runtime_s))
+        self._live_state = state
+        return state
+
+    def restore(self, state: TrainState) -> None:
+        """Load a TrainState into the live objects.  Idempotent — `step`
+        restores every iteration, so a freshly deserialized state and
+        the fold's own successor states take the identical path.  All
+        stream restores are in-place, so aliases (the HE backend's rng
+        handle, a LockedRNG wrapper) see the restored position too."""
+        for p in self.parties:
+            p.W = np.array(state.weights[p.name], np.float64)
+            p.stop = bool(state.stop)
+        self.label_party.losses = list(state.losses)
+        seeds.restore_generator(self.batch_rng, state.batch_rng)
+        self.jkey = jax.random.wrap_key_data(
+            jnp.asarray(np.asarray(state.jkey, np.uint32)))
+        self.rng.set_state(state.protocol_rng)
+        if state.select_rng is not None and self.select_rng is not self.rng:
+            self.select_rng.set_state(state.select_rng)
+        self.dealer.set_state(state.dealer)
+        if hasattr(self.backend, "discard_pooled_noise"):
+            # the pool is data-independent scratch; a resumed iteration
+            # re-prefetches its own batches (state.noise_pool_fill is 0
+            # at every boundary capture)
+            self.backend.discard_pooled_noise()
+        self.transport.meter = rebuild_meter(state.meter_sends)
+        self.transport.rounds = int(state.rounds)
+        self._live_state = state
+
+    def step(self, state: TrainState) -> TrainState:
+        """One Algorithm-1 iteration as a state transition.  When
+        `state` is the object the last capture produced (the fold's
+        common case), the live objects already embody it and the
+        restore is skipped — a deserialized or older state gets the
+        full in-place restore."""
+        cfg = self.cfg
+        if state is not self._live_state:
+            self.restore(state)
+        t0 = time.perf_counter()
+        order, cursor = state.order, int(state.cursor)
+        if cursor + cfg.batch_size > self.n_total:
+            order = self.batch_rng.permutation(self.n_total)
+            cursor = 0
+        idx = order[cursor:cursor + cfg.batch_size]
+        cursor += cfg.batch_size
+        self._iteration(idx)
+        return self._capture(
+            it=state.it + 1, order=order, cursor=cursor,
+            runtime_s=state.runtime_s + (time.perf_counter() - t0))
+
     # -- training loop ------------------------------------------------------
-    def run(self):
+    def run(self, state: TrainState | None = None):
+        """Fold `step` from `state` (or a fresh `init_state`) until
+        max_iter/stop; bit-exact vs the pre-refactor monolithic loop."""
         from repro.core.trainer import TrainResult
         cfg = self.cfg
-        t0 = time.perf_counter()
-        order = self.batch_rng.permutation(self.n_total)
-        cursor = 0
-        it = 0
-        while it < cfg.max_iter and not self.label_party.stop:
-            if cursor + cfg.batch_size > self.n_total:
-                order = self.batch_rng.permutation(self.n_total)
-                cursor = 0
-            idx = order[cursor:cursor + cfg.batch_size]
-            cursor += cfg.batch_size
-            self._iteration(idx)
-            it += 1
+        if state is None:
+            state = self.init_state()
+        while state.it < cfg.max_iter and not state.stop:
+            state = self.step(state)
+        if state is not self._live_state:
+            self.restore(state)    # live objects reflect the final state
         return TrainResult(
-            weights={p.name: p.W for p in self.parties},
-            losses=list(self.label_party.losses),
+            weights={n: np.array(w) for n, w in state.weights.items()},
+            losses=list(state.losses),
             meter=self.transport.meter,
-            runtime_s=time.perf_counter() - t0,
-            n_iter=it,
+            runtime_s=state.runtime_s,
+            n_iter=state.it,
             rounds=self.transport.rounds)

@@ -42,6 +42,7 @@ import collections
 import queue as _queue
 import socket as _socket
 import threading
+import time as _time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 
 import numpy as np
@@ -313,15 +314,22 @@ class SocketTransport(Transport):
         self._conns: dict[str, "socket.socket"] = {}
         self._send_locks: dict[str, threading.Lock] = {}
         self._readers: list[threading.Thread] = []
+        self._hb_threads: list[threading.Thread] = []
         self._closing = False
 
     # -- wiring -------------------------------------------------------------
     def attach(self, peer: str, sock) -> None:
         """Register an established connection to `peer` and start its
-        reader thread.  The reader blocks without a timeout — a mesh
+        reader thread.  Re-attaching an existing peer REPLACES the link
+        (reconnect after a drop): the stale socket is closed, its reader
+        dies on the closed fd, and subsequent sends use the new
+        connection.  The reader blocks without a timeout — a mesh
         link between two parties that exchange nothing for a long run
         (e.g. two non-CPs) must not fake a peer loss; liveness bounds
         live on the *waiters* (event-queue timeouts), not the wire."""
+        stale = self._conns.pop(peer, None)
+        if stale is not None:
+            _close_sock(stale)
         sock.settimeout(None)
         self._conns[peer] = sock
         self._send_locks[peer] = threading.Lock()
@@ -331,8 +339,45 @@ class SocketTransport(Transport):
         self._readers.append(t)
         t.start()
 
+    def detach(self, peer: str) -> None:
+        """Drop the link to `peer` (its reader exits on the closed fd)
+        without surfacing a `__closed__` event — the caller already
+        knows; used before a deliberate reconnect."""
+        sock = self._conns.pop(peer, None)
+        if sock is not None:
+            _close_sock(sock)
+
     def peers(self):
         return list(self._conns)
+
+    # -- liveness -----------------------------------------------------------
+    def start_heartbeat(self, dst: str, interval_s: float) -> None:
+        """Ship `hb` control frames to `dst` every `interval_s` while the
+        transport is open.  Heartbeats keep idle links warm (middlebox/
+        NAT state, half-open detection) and give the SENDER early
+        dead-peer detection: a kill surfaces as a send error on the next
+        beat instead of lying dormant until the next protocol frame.
+        Receivers discard `hb` frames without extending their protocol
+        timeouts (`netparty._next_message` keeps one deadline across
+        them — a wedged-but-beating peer must still trip the failure
+        detector); they are liveness traffic, never metered."""
+        from repro.runtime import messages as msg_lib
+
+        def beat() -> None:
+            while not self._closing and dst in self._conns:
+                _time.sleep(interval_s)
+                if self._closing or dst not in self._conns:
+                    return
+                try:
+                    self.send_control(msg_lib.Control(
+                        self.name, dst, kind="hb"))
+                except Exception:            # noqa: BLE001 — link gone;
+                    return                   # waiters surface the loss
+
+        t = threading.Thread(target=beat, daemon=True,
+                             name=f"hb-{self.name}-to-{dst}")
+        self._hb_threads.append(t)
+        t.start()
 
     # -- sending ------------------------------------------------------------
     def _send_frame(self, dst: str, frame: bytes) -> None:
@@ -372,7 +417,9 @@ class SocketTransport(Transport):
                 m = recv_frame(sock, self.codec)
                 self.inbound.put(m)
         except Exception as e:               # noqa: BLE001 — surfaced below
-            if not self._closing:
+            # a deliberately detached/replaced link (reconnect) is not a
+            # peer loss: only the currently registered socket may report
+            if not self._closing and self._conns.get(peer) is sock:
                 self.inbound.put(msg_lib.Control(
                     peer, self.name, kind="__closed__",
                     payload={"error": f"{type(e).__name__}: {e}"}))
@@ -386,15 +433,19 @@ class SocketTransport(Transport):
     def close(self) -> None:
         self._closing = True
         for sock in self._conns.values():
-            try:
-                sock.shutdown(_socket.SHUT_RDWR)
-            except OSError:
-                pass
-            try:
-                sock.close()
-            except OSError:
-                pass
+            _close_sock(sock)
         self._conns.clear()
+
+
+def _close_sock(sock) -> None:
+    try:
+        sock.shutdown(_socket.SHUT_RDWR)
+    except OSError:
+        pass
+    try:
+        sock.close()
+    except OSError:
+        pass
 
 
 def _recv_exact(sock, n: int) -> bytes:

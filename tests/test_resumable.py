@@ -1,0 +1,432 @@
+"""Resumable training sessions (runtime/session.py).
+
+Three layers of coverage:
+
+1. the step-state machine — `VFLScheduler.run()` as a fold over
+   `step(state)` is bit-exact vs the one-shot run, including a
+   checkpoint → FRESH scheduler → restore → continue split mid-run
+   (losses, weights, per-tag bytes) for k ∈ {2,3,4} × logistic/poisson;
+2. `TrainState` (de)serialization — hypothesis round-trips through the
+   `CheckpointManager` (tree + manifest extra) across GLMs/backends/k,
+   plus the hardened manager's torn-manifest skip and config/codec
+   mismatch REFUSAL;
+3. crash recovery on the real wire — kill -9 of a party process mid-run,
+   supervisor relaunch, resume from party-local checkpoints, final run
+   bit-identical to an uninterrupted one (mock fast here; the Paillier
+   variant is slow-marked).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.checkpoint import (CheckpointManager, CheckpointMismatch,  # noqa: E402
+                              save_checkpoint, valid_steps)
+from repro.core import trainer  # noqa: E402
+from repro.core.trainer import PartyData, VFLConfig  # noqa: E402
+from repro.data import synthetic, vertical  # noqa: E402
+from repro.runtime import (LocalTransport, PipelinedTransport,  # noqa: E402
+                           VFLScheduler)
+from repro.runtime import seeds, session  # noqa: E402
+from repro.runtime.session import TrainState  # noqa: E402
+
+
+def _make_parties(X, k):
+    parts = vertical.split_columns(X, k)
+    names = ["C"] + [f"B{i}" for i in range(1, k)]
+    return [PartyData(name=nm, X=p) for nm, p in zip(names, parts)]
+
+
+def _data(glm, n=200, seed=3):
+    if glm == "poisson":
+        return synthetic.dvisits(n=n, seed=seed)
+    return synthetic.credit_default(n=n, d=8, seed=seed)
+
+
+def _assert_exact(res, ref):
+    assert res.losses == ref.losses
+    assert set(res.weights) == set(ref.weights)
+    for name in ref.weights:
+        np.testing.assert_array_equal(res.weights[name], ref.weights[name])
+    assert dict(res.meter.by_tag) == dict(ref.meter.by_tag)
+    assert res.meter.total_bytes == ref.meter.total_bytes
+    assert res.n_iter == ref.n_iter
+
+
+# ---------------------------------------------------------------------------
+# 1. step-state machine: fold ≡ one-shot, checkpoint/restore mid-run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("glm,k", [("logistic", 2), ("logistic", 3),
+                                   ("logistic", 4), ("poisson", 3)])
+def test_checkpoint_midrun_fresh_scheduler_bit_identical(glm, k, tmp_path):
+    """Save TrainState after 2 iterations, load it into a FRESH
+    scheduler (new actors, new backend, new transport), continue — the
+    spliced run must equal the uninterrupted one bit-for-bit."""
+    X, y = _data(glm)
+    cfg = VFLConfig(glm=glm, lr=0.1, max_iter=4, batch_size=64,
+                    he_backend="mock", tol=0.0, seed=11)
+    parties = _make_parties(X, k)
+    ref = trainer.train_vfl(parties, y, cfg)
+
+    sched_a = VFLScheduler(parties, y, cfg)
+    state = sched_a.init_state()
+    for _ in range(2):
+        state = sched_a.step(state)
+    mgr = CheckpointManager(str(tmp_path), config_hash=session.config_hash(cfg),
+                            codec_version=session.CODEC_VERSION)
+    tree, extra = state.to_checkpoint()
+    mgr.save(state.it, tree, extra)
+
+    got = CheckpointManager(
+        str(tmp_path), config_hash=session.config_hash(cfg),
+        codec_version=session.CODEC_VERSION).restore(
+            TrainState.tree_template([p.name for p in parties]))
+    assert got is not None and got[0] == 2
+    restored = TrainState.from_checkpoint(got[1], got[2])
+    assert restored.equals(state)
+
+    sched_b = VFLScheduler(parties, y, cfg)      # fresh everything
+    res = sched_b.run(state=restored)
+    _assert_exact(res, ref)
+
+
+def test_step_counters_and_random_cp_pipelined_resume():
+    """The dedicated CP-selection stream and the drawn counters survive
+    a mid-run state splice under PipelinedTransport + random CP."""
+    X, y = _data("logistic", n=300, seed=2)
+    cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=4, batch_size=128,
+                    he_backend="mock", tol=0.0, seed=6,
+                    cp_selection="random")
+    parties = _make_parties(X, 3)
+    ref = trainer.train_vfl(parties, y, cfg,
+                            transport=PipelinedTransport())
+    sched_a = VFLScheduler(parties, y, cfg, transport=PipelinedTransport())
+    state = sched_a.init_state()
+    state = sched_a.step(state)
+    assert state.select_rng is not None          # dedicated stream captured
+    assert state.select_rng["drawn"] == 1        # one choice per iteration
+    assert state.dealer["drawn"] > 0             # loss-product triples drawn
+    round_tripped = TrainState.from_checkpoint(*state.to_checkpoint())
+    assert round_tripped.equals(state)
+    sched_b = VFLScheduler(parties, y, cfg, transport=PipelinedTransport())
+    res = sched_b.run(state=round_tripped)
+    _assert_exact(res, ref)
+
+
+def test_early_stop_state_is_terminal():
+    """A state captured at the stop flag folds to itself: run() from it
+    performs no further iterations."""
+    X, y = _data("logistic", n=300, seed=15)
+    cfg = VFLConfig(glm="logistic", lr=0.0, max_iter=10, batch_size=128,
+                    he_backend="mock", tol=1e-3, seed=5)
+    parties = _make_parties(X, 2)
+    sched = VFLScheduler(parties, y, cfg)
+    res = sched.run()
+    assert res.n_iter == 2
+    state = sched._capture(it=res.n_iter, order=np.arange(len(X)), cursor=0,
+                           runtime_s=0.0)
+    assert state.stop
+    res2 = VFLScheduler(parties, y, cfg).run(state=state)
+    assert res2.n_iter == res.n_iter and res2.losses == res.losses
+
+
+def test_counted_rng_drawn_and_locked_passthrough():
+    """seeds.CountedGenerator counts draw calls, serializes its exact
+    position, and stays counting under transport.LockedRNG."""
+    from repro.runtime.transport import LockedRNG
+    rng = seeds.protocol_rng(7)
+    assert rng.drawn() == 0
+    a = rng.integers(2 ** 31)
+    rng.random(4)
+    assert rng.drawn() == 2
+    snap = rng.state()
+    b = rng.integers(2 ** 31)
+    rng.set_state(snap)
+    assert rng.drawn() == 2
+    assert rng.integers(2 ** 31) == b            # exact position restored
+    locked = LockedRNG(seeds.protocol_rng(7))
+    assert int(locked.integers(2 ** 31)) == int(a)   # same stream replica
+    assert locked.drawn() == 1
+    st2 = locked.state()
+    assert st2["drawn"] == 1
+    # a counted state transplants across instances: position + counter
+    fresh = seeds.protocol_rng(0)
+    fresh.set_state(st2)
+    ref = seeds.protocol_rng(7)
+    ref.integers(2 ** 31)
+    assert int(fresh.integers(2 ** 31)) == int(ref.integers(2 ** 31))
+    # replica equality: same seed, same draw count -> same next value
+    r1, r2 = seeds.party_rng(3, 1), seeds.party_rng(3, 1)
+    r1.integers(10)
+    r2.set_state(r1.state())
+    assert int(r1.integers(2 ** 31)) == int(r2.integers(2 ** 31))
+
+
+# ---------------------------------------------------------------------------
+# 2. TrainState serialization (hypothesis) + hardened manager
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=1),     # glm index
+       st.integers(min_value=2, max_value=4),     # k
+       st.integers(min_value=0, max_value=2),     # steps before capture
+       st.integers(min_value=0, max_value=10_000))  # run seed
+def test_trainstate_roundtrip_hypothesis(glm_i, k, n_steps, seed):
+    glm = ("logistic", "poisson")[glm_i]
+    X, y = _data(glm, n=120, seed=3)
+    cfg = VFLConfig(glm=glm, lr=0.1, max_iter=3, batch_size=32,
+                    he_backend="mock", tol=0.0, seed=seed)
+    sched = VFLScheduler(_make_parties(X, k), y, cfg)
+    state = sched.init_state()
+    for _ in range(n_steps):
+        state = sched.step(state)
+    tree, extra = state.to_checkpoint()
+    # manifest extra must be JSON-able exactly as the manager writes it
+    import json
+    extra = json.loads(json.dumps(extra))
+    back = TrainState.from_checkpoint(tree, extra)
+    assert back.equals(state)
+    assert state.equals(back)
+    assert back.it == n_steps
+    assert back.protocol_rng["drawn"] == state.protocol_rng["drawn"]
+
+
+@pytest.mark.slow
+def test_trainstate_roundtrip_paillier_backend(tmp_path):
+    """Same round-trip with the real Paillier backend in the loop (the
+    protocol stream has consumed keygen + noise draws)."""
+    X, y = _data("logistic", n=100, seed=5)
+    cfg = VFLConfig(glm="logistic", lr=0.2, max_iter=2, batch_size=32,
+                    he_backend="paillier", key_bits=192, tol=0.0, seed=1)
+    parties = _make_parties(X, 3)
+    ref = trainer.train_vfl(parties, y, cfg)
+    sched = VFLScheduler(parties, y, cfg)
+    state = sched.step(sched.init_state())
+    mgr = CheckpointManager(str(tmp_path))
+    tree, extra = state.to_checkpoint()
+    mgr.save(state.it, tree, extra)
+    s, t2, e2 = mgr.restore(TrainState.tree_template([p.name
+                                                      for p in parties]))
+    back = TrainState.from_checkpoint(t2, e2)
+    assert back.equals(state)
+    res = VFLScheduler(parties, y, cfg).run(state=back)
+    _assert_exact(res, ref)
+
+
+def test_manager_refuses_config_and_codec_mismatch(tmp_path):
+    tree = {"a": np.arange(3)}
+    save_checkpoint(str(tmp_path), 1, tree, config_hash="aaaa",
+                    codec_version=1)
+    ok = CheckpointManager(str(tmp_path), config_hash="aaaa",
+                           codec_version=1)
+    assert ok.steps() == [1]
+    assert ok.restore({"a": 0})[0] == 1
+    bad_cfg = CheckpointManager(str(tmp_path), config_hash="bbbb",
+                                codec_version=1)
+    with pytest.raises(CheckpointMismatch, match="config hash"):
+        bad_cfg.restore({"a": 0})
+    with pytest.raises(CheckpointMismatch, match="config hash"):
+        bad_cfg.steps()
+    bad_codec = CheckpointManager(str(tmp_path), config_hash="aaaa",
+                                  codec_version=2)
+    with pytest.raises(CheckpointMismatch, match="codec version"):
+        bad_codec.restore({"a": 0})
+    # unstamped legacy checkpoint + expectation -> also refused
+    save_checkpoint(str(tmp_path), 2, tree)
+    with pytest.raises(CheckpointMismatch):
+        ok.restore({"a": 0})
+
+
+def test_manager_skips_torn_manifest_and_archive(tmp_path):
+    tree = {"a": np.arange(4)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    save_checkpoint(str(tmp_path), 3, tree)
+    # torn manifest: truncated JSON (crash mid-manifest-write)
+    with open(tmp_path / "step_3.json", "w") as f:
+        f.write('{"step": 3, "n_leav')
+    # torn archive: manifest fine, npz corrupted
+    with open(tmp_path / "step_2.npz", "r+b") as f:
+        f.write(b"garbage")
+    assert valid_steps(str(tmp_path)) == [1]
+    got = CheckpointManager(str(tmp_path)).restore({"a": 0})
+    assert got is not None and got[0] == 1
+
+
+def test_config_hash_semantics():
+    cfg_a = VFLConfig(glm="logistic", seed=1)
+    cfg_b = VFLConfig(glm="logistic", seed=1, checkpoint_every=5)
+    cfg_c = VFLConfig(glm="logistic", seed=2)
+    assert session.config_hash(cfg_a) == session.config_hash(cfg_b)
+    assert session.config_hash(cfg_a) != session.config_hash(cfg_c)
+
+
+# ---------------------------------------------------------------------------
+# 3. crash recovery on the real wire (kill -9 + supervised resume)
+# ---------------------------------------------------------------------------
+
+def _assert_socket_exact(res, ref):
+    assert res.losses == ref.losses
+    for name in ref.weights:
+        np.testing.assert_array_equal(res.weights[name], ref.weights[name])
+    assert dict(res.meter.by_tag) == dict(ref.meter.by_tag)
+    assert res.meter.total_bytes == ref.meter.total_bytes
+    assert res.n_iter == ref.n_iter
+    assert dict(res.measured_meter.by_tag) == dict(res.meter.by_tag)
+
+
+def test_kill_and_resume_socket_parity_mock(tmp_path):
+    """kill -9 one party mid-run -> supervisor relaunch -> resume from
+    party-local checkpoints: losses, weights, and per-tag analytic AND
+    measured byte accounting bit-identical to an uninterrupted run."""
+    from repro.launch.cluster import train_vfl_socket_resilient
+    X, y = _data("logistic", n=200, seed=3)
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=4, batch_size=64,
+                    he_backend="mock", tol=0.0, seed=11,
+                    checkpoint_every=1)
+    parties = _make_parties(X, 3)
+    ref = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    res = train_vfl_socket_resilient(
+        parties, y, cfg, checkpoint_dir=str(tmp_path),
+        kill_plan={2: "B1"})
+    _assert_socket_exact(res, ref)
+    assert res.restarts == 1
+    assert res.resume_report["step"] >= 1        # rolled back, not replayed
+    # the audited replicated counters agreed across all 3 parties
+    assert set(res.resume_report["rng_drawn"]) == {"C", "B1", "B2"}
+
+
+def test_kill_and_resume_socket_parity_poisson_mock(tmp_path):
+    """Same invariant under the order-sensitive e^z chaining and a
+    kill of the label holder C itself."""
+    from repro.launch.cluster import train_vfl_socket_resilient
+    X, y = _data("poisson", n=200, seed=7)
+    cfg = VFLConfig(glm="poisson", lr=0.05, max_iter=3, batch_size=48,
+                    he_backend="mock", tol=0.0, seed=5,
+                    checkpoint_every=1)
+    parties = _make_parties(X, 3)
+    ref = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    res = train_vfl_socket_resilient(
+        parties, y, cfg, checkpoint_dir=str(tmp_path),
+        kill_plan={1: "C"})
+    _assert_socket_exact(res, ref)
+    assert res.restarts == 1
+
+
+@pytest.mark.slow
+def test_kill_and_resume_socket_parity_paillier(tmp_path):
+    """Real Paillier over the wire: the killed party's private key is
+    re-derived (never read from disk), mask/noise streams roll back to
+    the checkpointed positions, and the run stays bit-identical."""
+    from repro.launch.cluster import train_vfl_socket_resilient
+    X, y = _data("poisson", n=90, seed=19)
+    cfg = VFLConfig(glm="poisson", lr=0.05, max_iter=3, batch_size=24,
+                    he_backend="paillier", key_bits=192, tol=0.0, seed=17,
+                    checkpoint_every=1)
+    parties = _make_parties(X, 3)
+    ref = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    res = train_vfl_socket_resilient(
+        parties, y, cfg, checkpoint_dir=str(tmp_path),
+        kill_plan={1: "B1"})
+    _assert_socket_exact(res, ref)
+    assert res.restarts == 1
+
+
+def test_resume_refused_on_config_mismatch(tmp_path):
+    """A checkpoint directory written under one config must refuse a
+    resume under another, with the mismatch spelled out."""
+    from repro.launch.cluster import ClusterError, train_vfl_socket
+    X, y = _data("logistic", n=120, seed=3)
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=2, batch_size=32,
+                    he_backend="mock", tol=0.0, seed=11,
+                    checkpoint_every=1)
+    parties = _make_parties(X, 2)
+    train_vfl_socket(parties, y, cfg, checkpoint_dir=str(tmp_path))
+    other = VFLConfig(glm="logistic", lr=0.2, max_iter=2, batch_size=32,
+                      he_backend="mock", tol=0.0, seed=11,
+                      checkpoint_every=1)
+    with pytest.raises(ClusterError, match="config hash"):
+        train_vfl_socket(parties, y, other, checkpoint_dir=str(tmp_path),
+                         resume=True)
+
+
+def test_completed_run_resume_is_noop(tmp_path):
+    """Resuming a directory whose newest common step is the final
+    iteration performs zero additional iterations and reproduces the
+    same result (idempotent recovery)."""
+    from repro.launch.cluster import train_vfl_socket
+    X, y = _data("logistic", n=120, seed=3)
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=2, batch_size=32,
+                    he_backend="mock", tol=0.0, seed=11,
+                    checkpoint_every=1)
+    parties = _make_parties(X, 2)
+    first = train_vfl_socket(parties, y, cfg, checkpoint_dir=str(tmp_path))
+    again = train_vfl_socket(parties, y, cfg, checkpoint_dir=str(tmp_path),
+                             resume=True)
+    assert again.resume_report["step"] == 2
+    _assert_socket_exact(again, first)
+
+
+# ---------------------------------------------------------------------------
+# transport-level liveness plumbing
+# ---------------------------------------------------------------------------
+
+def test_socket_transport_reconnect_and_heartbeat():
+    """attach() replaces a dropped link without a spurious peer-loss
+    event; heartbeat frames flow and are plain `hb` controls."""
+    import queue
+    import socket as socket_lib
+
+    from repro.runtime import messages as msg_lib
+    from repro.runtime.codec import Codec
+    from repro.runtime.transport import SocketTransport
+
+    def pair():
+        srv = socket_lib.create_server(("127.0.0.1", 0))
+        cli = socket_lib.create_connection(srv.getsockname())
+        conn, _ = srv.accept()
+        srv.close()
+        return cli, conn
+
+    a = SocketTransport("A", Codec())
+    b = SocketTransport("B", Codec())
+    s_ab, s_ba = pair()
+    a.attach("B", s_ab)
+    b.attach("A", s_ba)
+    a.send_control(msg_lib.Control("A", "B", kind="ping"))
+    assert b.inbound.get(timeout=5).kind == "ping"
+
+    # reconnect: B deliberately drops the stale link (detach — silenced),
+    # both ends re-attach a fresh connection, traffic continues, and
+    # neither stale reader posts a spurious __closed__ event
+    b.detach("A")
+    s2_ab, s2_ba = pair()
+    a.attach("B", s2_ab)          # attach-replace: closes A's stale socket
+    b.attach("A", s2_ba)
+    a.send_control(msg_lib.Control("A", "B", kind="ping2"))
+    got = b.inbound.get(timeout=5)
+    assert isinstance(got, msg_lib.Control) and got.kind == "ping2"
+
+    # heartbeats: periodic `hb` frames arrive on the receiver
+    a.start_heartbeat("B", 0.05)
+    hb = b.inbound.get(timeout=5)
+    assert isinstance(hb, msg_lib.Control) and hb.kind == "hb"
+
+    # no spurious peer-loss surfaced by the reconnect (checked BEFORE
+    # close — the close() pair itself legitimately races a final
+    # __closed__ on whichever side closes second)
+    leftovers = []
+    try:
+        while True:
+            leftovers.append(b.inbound.get_nowait())
+    except queue.Empty:
+        pass
+    assert all(m.kind != "__closed__" for m in leftovers
+               if isinstance(m, msg_lib.Control))
+    a.close()
+    b.close()
