@@ -84,6 +84,26 @@ def bench_fig2(paper: bool) -> None:
              f"max_residual_mb={f['max_residual_mb']}")
 
 
+def check_committed_guards() -> None:
+    """Re-validate the guard rows of the committed BENCH_crypto.json
+    (structure + ratios), without re-measuring.  Exits non-zero on any
+    violation so CI fails if a regressing measurement is committed."""
+    from benchmarks import kernel_bench
+    report = json.loads(BENCH_CRYPTO_PATH.read_text())
+    rows = report["kernels"]
+    guarded = [r["name"] for r in rows if r.get("guard_vs")]
+    if not guarded:
+        raise SystemExit(f"{BENCH_CRYPTO_PATH.name}: no guard rows found "
+                         "— regenerate with python -m benchmarks.run "
+                         "--only kernels")
+    failures = kernel_bench.check_guards(rows)
+    if failures:
+        raise SystemExit(f"{BENCH_CRYPTO_PATH.name} guard violations:\n  "
+                         + "\n  ".join(failures))
+    print(f"# {BENCH_CRYPTO_PATH.name}: {len(guarded)} guard rows ok "
+          f"({', '.join(guarded)})")
+
+
 def bench_kernels(_: bool, smoke: bool = False) -> None:
     import jax
 
@@ -92,6 +112,13 @@ def bench_kernels(_: bool, smoke: bool = False) -> None:
     rows = kernel_bench.run(smoke=smoke)
     for r in rows:
         _csv(f"kernel.{r['name']}", r["us"], r["derived"])
+    failures = kernel_bench.check_guards(rows)
+    if failures:
+        # SystemExit (not Exception) so main()'s report-and-continue
+        # wrapper does NOT swallow it — the CI smoke run must go red
+        raise SystemExit("kernel guard violations (engine-routed "
+                         "interpret mode slower than the library):\n  "
+                         + "\n  ".join(failures))
     if smoke:
         # drift check only — never clobber the committed full-measurement
         # perf trajectory with tiny smoke numbers
@@ -192,7 +219,13 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes (CI kernel-drift check; kernels only)")
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--guards", action="store_true",
+                    help="validate the committed BENCH_crypto.json guard "
+                         "rows and exit (no measurement)")
     args = ap.parse_args()
+    if args.guards:
+        check_committed_guards()
+        return
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:

@@ -16,9 +16,16 @@ python -m pytest -q --collect-only >/dev/null
 python scripts/check_docs.py
 
 # Crypto-kernel drift smoke (CPU, tiny sizes): the kernel microbench
-# must run end-to-end.  Engine bit-exactness parity itself lives in
-# tests/test_engine.py, collected by the tier-1 sweep below.
+# must run end-to-end AND its guard rows must hold — engine-routed
+# interpret-mode ops may never be slower than the library path (the
+# bench exits non-zero on a guard violation).  Engine bit-exactness
+# parity itself lives in tests/test_engine.py + tests/test_rns.py,
+# collected by the tier-1 sweep below.
 python -m benchmarks.run --only kernels --smoke >/dev/null
+
+# The committed perf trajectory must also satisfy its own guards
+# (catches committing a regressing full measurement).
+python -m benchmarks.run --guards >/dev/null
 
 # k-scaling smoke: the concurrent-leg scheduler must survive the
 # fig2 benchmark path end-to-end (full curves: benchmarks.fig2_scaling).

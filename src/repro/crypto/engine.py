@@ -19,6 +19,23 @@ so the switch is purely a performance knob: select with the
 `set_engine`/`use_engine`.  ``auto`` resolves to ``pallas`` on TPU and
 ``jnp`` elsewhere.
 
+Orthogonal to the backend, the ``pipeline`` field picks the *arithmetic*
+each op runs (docs/engine.md §RNS):
+
+* ``cios`` — radix-2^12 CIOS limb loops (mask/shift only; wins at small
+             moduli and is the only pipeline the sharded path runs);
+* ``rns``  — the residue-number-system channel pipeline (`crypto.rns`):
+             montmul becomes one pointwise round + two exact f32
+             matmuls, the MXU-shaped form that wins at large moduli;
+* ``auto`` — per-modulus routing at `RNS_MIN_BITS`: RNS at ≥ 512-bit
+             moduli, CIOS/library below — so engine-routed ops are
+             never slower than the library at any committed key size
+             (benchmarks/kernel_bench.py guards this).
+
+Fixed-base exponentiation (`fixed_base_exp`, fed by
+`crypto.fixed_base.FixedBaseTable`) is always RNS — the table stores
+·B-domain channel states and beats the ladder at every size.
+
 Scale-out: give the engine a device ``mesh`` (or construct a
 `distributed.he_sharding.ShardedCryptoEngine`) and every batched op runs
 under `shard_map` with the ciphertext batch axis sharded over
@@ -45,6 +62,15 @@ _U32 = jnp.uint32
 BACKENDS = ("jnp", "pallas-interpret", "pallas")
 ENV_VAR = "REPRO_CRYPTO_ENGINE"
 
+PIPELINES = ("auto", "cios", "rns")
+PIPELINE_ENV_VAR = "REPRO_CRYPTO_PIPELINE"
+# Modulus width (bits of N, i.e. of n² for ciphertext ops) at and above
+# which ``auto`` routes to the RNS pipeline.  Measured crossover on CPU
+# (BENCH_crypto.json): at 1024-bit montmul RNS runs 0.7–0.8× the
+# library; at 256-bit its ~14 integer-divides per round lose to CIOS's
+# pure mask/shift arithmetic.  docs/engine.md §amortization.
+RNS_MIN_BITS = 512
+
 
 def resolve_backend(name: str | None = None) -> str:
     """Resolve a backend name to one of `BACKENDS`.
@@ -68,6 +94,18 @@ def resolve_backend(name: str | None = None) -> str:
     return name
 
 
+def resolve_pipeline(name: str | None = None) -> str:
+    """Resolve a pipeline name to one of `PIPELINES`.  ``auto``/None/""
+    consults ``REPRO_CRYPTO_PIPELINE`` and stays ``auto`` (per-modulus
+    routing) when unset."""
+    if name in (None, "", "auto"):
+        name = os.environ.get(PIPELINE_ENV_VAR, "auto") or "auto"
+    if name not in PIPELINES:
+        raise ValueError(f"unknown crypto pipeline {name!r}; "
+                         f"choose from {PIPELINES}")
+    return name
+
+
 @dataclasses.dataclass(frozen=True)
 class CryptoEngine:
     """Immutable dispatch descriptor (hashable, so it can ride through
@@ -82,6 +120,12 @@ class CryptoEngine:
       backend: ``"jnp"`` (library lax loops), ``"pallas-interpret"``
         (fused kernels, interpret mode) or ``"pallas"`` (fused kernels
         compiled for TPU).
+      pipeline: ``"cios"`` | ``"rns"`` | ``"auto"`` — which arithmetic
+        the big ops run.  ``auto`` (default) picks per modulus at
+        `RNS_MIN_BITS` and additionally drops *interpret-mode* small-
+        modulus ops to the jnp library (an interpreted CIOS kernel can
+        never beat the same loop jitted directly).  Explicit values pin
+        the arithmetic — the parity suite uses that.
       tile_b: batch tile for the montmul / fused-ladder kernels.
       tile_m: output-column tile for the fused HE matvec kernel.
       chunk_n: ciphertext-row chunk bounding the matvec power table's
@@ -96,6 +140,7 @@ class CryptoEngine:
     """
 
     backend: str = "jnp"
+    pipeline: str = "auto"      # arithmetic: auto | cios | rns
     tile_b: int = 128           # montmul / ladder batch tile
     tile_m: int = 128           # he_matvec output-column tile
     chunk_n: int = 512          # he_matvec ciphertext-row chunk (VMEM)
@@ -138,8 +183,29 @@ class CryptoEngine:
         engine `he_sharding` runs inside each shard_map body."""
         if self.mesh is None:
             return self
-        return CryptoEngine(backend=self.backend, tile_b=self.tile_b,
-                            tile_m=self.tile_m, chunk_n=self.chunk_n)
+        return CryptoEngine(backend=self.backend, pipeline=self.pipeline,
+                            tile_b=self.tile_b, tile_m=self.tile_m,
+                            chunk_n=self.chunk_n)
+
+    def _route(self, mod: Modulus) -> str:
+        """Pick the arithmetic for one op on modulus `mod`:
+        ``"lib"`` (bigint CIOS loops), ``"cios"`` (CIOS kernel),
+        ``"rns-jnp"`` (`crypto.rns` library) or ``"rns"`` (RNS kernel).
+
+        ``auto`` routes by modulus width (`RNS_MIN_BITS`), and below the
+        threshold keeps the CIOS *kernel* only for the compiled backend:
+        in interpret mode the kernel is the library algorithm plus
+        interpreter overhead, so the library path is strictly faster —
+        this is what makes engine-routed interpret mode never slower
+        than the library (the kernel_bench guard rows assert it)."""
+        pipe = resolve_pipeline(self.pipeline)
+        if pipe == "auto":
+            if mod.value.bit_length() >= RNS_MIN_BITS:
+                return "rns" if self.uses_kernels else "rns-jnp"
+            return "cios" if self.backend == "pallas" else "lib"
+        if pipe == "rns":
+            return "rns" if self.uses_kernels else "rns-jnp"
+        return "cios" if self.uses_kernels else "lib"
 
     # -- fused hot-path ops -------------------------------------------------
     def mont_mul(self, a: jnp.ndarray, b: jnp.ndarray,
@@ -156,9 +222,16 @@ class CryptoEngine:
         if self.sharded:
             from repro.distributed import he_sharding
             return he_sharding.sharded_mont_mul(self, a, b, mod)
-        if not self.uses_kernels:
+        route = self._route(mod)
+        if route == "lib":
             return bigint.mont_mul(a, b, mod)
+        if route == "rns-jnp":
+            from repro.crypto import rns
+            return rns.mont_mul(rns.for_modulus(mod), a, b)
         from repro.kernels import ops
+        if route == "rns":
+            return ops.rns_montmul(a, b, mod, tile_b=self.tile_b,
+                                   interpret=self.interpret)
         return ops.montmul(a, b, mod, tile_b=self.tile_b,
                            interpret=self.interpret)
 
@@ -179,9 +252,17 @@ class CryptoEngine:
         if self.sharded:
             from repro.distributed import he_sharding
             return he_sharding.sharded_mont_exp_bits(self, base, bits, mod)
-        if not self.uses_kernels:
+        route = self._route(mod)
+        if route == "lib":
             return bigint.mont_exp_bits(base, bits, mod)
+        if route == "rns-jnp":
+            from repro.crypto import rns
+            return rns.mont_exp_bits(rns.for_modulus(mod), base, bits)
         from repro.kernels import ops
+        if route == "rns":
+            return ops.rns_mont_exp_fused(base, bits, mod,
+                                          tile_b=self.tile_b,
+                                          interpret=self.interpret)
         return ops.mont_exp_fused(base, bits, mod, tile_b=self.tile_b,
                                   interpret=self.interpret)
 
@@ -220,11 +301,53 @@ class CryptoEngine:
             from repro.distributed import he_sharding
             return he_sharding.sharded_he_matvec(self, cts, digits, mod,
                                                  window)
+        route = self._route(mod)
+        if route == "rns-jnp":
+            from repro.crypto import rns
+            return rns.he_matvec(rns.for_modulus(mod), cts,
+                                 jnp.asarray(digits, _U32), window)
         from repro.kernels import ops
+        if route == "rns":
+            return ops.rns_he_matvec_fused(cts, jnp.asarray(digits, _U32),
+                                           mod, window=window,
+                                           tile_m=self.tile_m,
+                                           chunk_n=self.chunk_n,
+                                           interpret=self.interpret)
         return ops.he_matvec_fused(cts, jnp.asarray(digits, _U32), mod,
                                    window=window, tile_m=self.tile_m,
                                    chunk_n=self.chunk_n,
                                    interpret=self.interpret)
+
+    def fixed_base_exp(self, table, digits, mod: Modulus) -> jnp.ndarray:
+        """Windowed fixed-base exponentiation from a persistent table.
+
+        Args:
+          table: a `crypto.fixed_base.FixedBaseTable` for base h mod N
+            (its ``table_rns`` holds ·B-domain channel states).
+          digits: (..., levels) LSB-first base-2^window exponent digits
+            (`fixed_base.exp_digits`).
+          mod: the table's modulus (n² for noise tables).
+        Returns:
+          (..., L) canonical Montgomery-domain limbs of h^e·R — the
+          `paillier.noise_to_mont` contract, at ~levels RNS rounds
+          instead of a 2·|N|-round ladder (BENCH fixed_base rows).
+
+        Always the RNS pipeline regardless of `pipeline` — the table
+        format *is* RNS, and the digit walk beats the ladder at every
+        committed size.  Not mesh-routed: noise prefetch is party-local
+        (runtime noise pool), so a sharded engine evaluates on its own
+        device.
+        """
+        digits = jnp.asarray(digits, _U32)
+        table_rns = jnp.asarray(table.table_rns, _U32)
+        if self.uses_kernels:
+            from repro.kernels import ops
+            return ops.rns_fixed_base_fused(table_rns, digits, mod,
+                                            window=table.window,
+                                            tile_b=self.tile_b,
+                                            interpret=self.interpret)
+        from repro.crypto import rns
+        return rns.fixed_base_exp(rns.for_modulus(mod), table_rns, digits)
 
     # -- derived conveniences (same dispatch, used by paillier.py) ----------
     def to_mont(self, a: jnp.ndarray, mod: Modulus) -> jnp.ndarray:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Any
 
 import jax.numpy as jnp
 import numpy as np
@@ -126,6 +127,9 @@ class PrivateKey:
     crt_p: CRTComponent | None = None
     crt_q: CRTComponent | None = None
     q_pinv_mont: np.ndarray | None = None   # p^{-1}·R_q mod q (CRT combine)
+    # persistent fixed-base noise table (crypto.fixed_base), attached by
+    # keygen(table_path=…); consumers fall back to the r^n ladder when None
+    noise_table: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,9 +172,17 @@ def _crt_component(prime: int, n: int) -> CRTComponent:
         mod_p=mod_p)
 
 
-def keygen(key_bits: int, seed: int | None = None) -> PrivateKey:
+def keygen(key_bits: int, seed: int | None = None, *,
+           table_path: str | None = None,
+           table_window: int | None = None) -> PrivateKey:
     """Generate a Paillier keypair.  `key_bits` is the modulus size
-    (paper: 1024; tests default smaller for CPU speed)."""
+    (paper: 1024; tests default smaller for CPU speed).
+
+    `table_path` additionally builds (or loads, when the file already
+    holds THIS keypair's table — fingerprint-checked) the persistent
+    fixed-base noise table and attaches it as `PrivateKey.noise_table`;
+    `protocols.PaillierBackend` then routes encryption noise through it
+    automatically."""
     rng = np.random.default_rng(seed)
     half = key_bits // 2
     while True:
@@ -190,6 +202,13 @@ def keygen(key_bits: int, seed: int | None = None) -> PrivateKey:
     pub = PublicKey(
         n=n, key_bits=key_bits, mod_n=mod_n, mod_n2=mod_n2,
         n_limbs=int_to_limbs(n, mod_n.L))
+    noise_table = None
+    if table_path is not None:
+        from repro.crypto import fixed_base
+        window = (fixed_base.DEFAULT_WINDOW if table_window is None
+                  else table_window)
+        noise_table, _ = fixed_base.ensure_table(n, mod_n2, table_path,
+                                                 window=window, rng=rng)
     return PrivateKey(
         pub=pub,
         lam=lam,
@@ -201,6 +220,7 @@ def keygen(key_bits: int, seed: int | None = None) -> PrivateKey:
         crt_q=_crt_component(q, n),
         q_pinv_mont=int_to_limbs((pow(p, -1, q) * R_q) % q,
                                  Modulus.make(q).L),
+        noise_table=noise_table,
     )
 
 
@@ -251,6 +271,28 @@ def noise_to_mont(pub: PublicKey, r_limbs, engine=None) -> jnp.ndarray:
     eng = _eng(engine)
     rm = eng.to_mont(jnp.asarray(r_limbs, _U32), pub.mod_n2)
     return eng.mont_exp_const(rm, pub.n, pub.mod_n2)
+
+
+def noise_from_table(pub: PublicKey, table, rho_digits,
+                     engine=None) -> jnp.ndarray:
+    """Table-backed encryption noise: h^ρ mod n², Montgomery domain —
+    the DJN short-exponent form of `noise_to_mont` (h = x^n is fixed at
+    keygen, ρ is fresh and short), evaluated from a persistent
+    `crypto.fixed_base.FixedBaseTable` in ~levels RNS rounds instead of
+    an |n|-bit ladder (BENCH fixed_base rows: ≈24× at 1024-bit keys).
+    `rho_digits`: (batch, levels) LSB-first window digits
+    (`fixed_base.draw_exponent_digits`)."""
+    eng = _eng(engine)
+    if table.fingerprint != _table_fingerprint(pub):
+        from repro.crypto.fixed_base import TableMismatchError
+        raise TableMismatchError(
+            "noise table was built for a different public key")
+    return eng.fixed_base_exp(table, rho_digits, pub.mod_n2)
+
+
+def _table_fingerprint(pub: PublicKey) -> str:
+    from repro.crypto.fixed_base import key_fingerprint
+    return key_fingerprint(pub.n)
 
 
 def encrypt_with_noise(pub: PublicKey, m_limbs, rn_mont,

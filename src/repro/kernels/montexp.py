@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.crypto import rns as rns_lib
 from repro.kernels.montmul import _montmul_block
 
 _U32 = jnp.uint32
@@ -173,3 +174,236 @@ def he_matvec_tiled(cts: jnp.ndarray, digits: jnp.ndarray, n: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((m, L), jnp.uint32),
         interpret=interpret,
     )(cts, digits, n.reshape(1, L), r1.reshape(1, L))
+
+
+# ---------------------------------------------------------------------------
+# RNS channel-domain fused kernels (the compiled pipeline — crypto/rns.py)
+# ---------------------------------------------------------------------------
+#
+# Same fusion story as above, but every Montgomery product is ONE RNS
+# round (`rns.montmul_channels` traced inline): channel-pointwise VPU ops
+# plus two exact f32 base-extension matmuls that map onto the MXU.  All
+# three kernels work on channel states in the ·B domain; the limbs ↔
+# channels conversions and the final exact reconstruction (`rns.from_rns`)
+# stay outside in ops.py, amortized over the whole ladder / matvec / table
+# walk.  Per-program VMEM at CH=166 (1024-bit n²): ladder ~4 blocks ×
+# TILE_B × CH × 4 B ≈ 0.4 MB; matvec table 2^w × n_chunk × CH × 4 B —
+# ops.py chunks n exactly as it does for the CIOS kernel.
+
+def _rns_mm(mods, tb, ta, vecs, kA, kB, ainv_r):
+    return functools.partial(rns_lib.montmul_channels, mods=mods, t_b=tb,
+                             t_a=ta, vecs=vecs, kA=kA, kB=kB,
+                             ainv_r=ainv_r)
+
+
+def _rns_exp_kernel(kA: int, kB: int, ainv_r: int, nbits: int,
+                    u_ref, bits_ref, mods_ref, tb_ref, ta_ref, vecs_ref,
+                    one_ref, exit_ref, o_ref):
+    u = u_ref[...]                               # (TB, CH) scaled base
+    bits = bits_ref[...]                         # (TB, nbits) MSB-first
+    mm = _rns_mm(mods_ref[...], tb_ref[...], ta_ref[...], vecs_ref[...],
+                 kA, kB, ainv_r)
+    acc0 = jnp.broadcast_to(one_ref[...], u.shape)
+
+    def step(i, acc):
+        acc = mm(acc, acc)
+        mul = mm(acc, u)
+        bit = jax.lax.dynamic_slice_in_dim(bits, i, 1, axis=1)   # (TB, 1)
+        return jnp.where(bit == 1, mul, acc)
+
+    acc = jax.lax.fori_loop(0, nbits, step, acc0)
+    o_ref[...] = mm(acc, exit_ref[...])          # v^e·B ↦ v^e·R
+
+
+@functools.partial(jax.jit, static_argnames=("kA", "kB", "ainv_r",
+                                             "tile_b", "interpret"))
+def rns_mont_exp_tiled(u: jnp.ndarray, bits: jnp.ndarray,
+                       mods: jnp.ndarray, t_b: jnp.ndarray,
+                       t_a: jnp.ndarray, vecs: jnp.ndarray,
+                       one: jnp.ndarray, exitc: jnp.ndarray, *,
+                       kA: int, kB: int, ainv_r: int,
+                       tile_b: int = DEFAULT_TILE_B,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Fused constant-time ladder on channel states.  u: (batch, CH) the
+    base via `rns.to_rns_scaled`; bits: (batch, nbits) MSB-first.
+    Returns the channel state of base^e·R (< (kB+2)·N) — finish with
+    `rns.from_rns` outside."""
+    batch, nbits = bits.shape
+    CH = u.shape[1]
+    assert batch % tile_b == 0, "pad batch to a tile multiple in ops.py"
+    grid = (batch // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_rns_exp_kernel, kA, kB, ainv_r, nbits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, CH), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, nbits), lambda i: (i, 0)),
+            pl.BlockSpec((1, CH), lambda i: (0, 0)),
+            pl.BlockSpec(t_b.shape, lambda i: (0, 0)),
+            pl.BlockSpec(t_a.shape, lambda i: (0, 0)),
+            pl.BlockSpec((6, CH), lambda i: (0, 0)),
+            pl.BlockSpec((1, CH), lambda i: (0, 0)),
+            pl.BlockSpec((1, CH), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, CH), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, CH), jnp.uint32),
+        interpret=interpret,
+    )(u, bits, mods.reshape(1, CH), t_b, t_a, vecs,
+      one.reshape(1, CH), exitc.reshape(1, CH))
+
+
+def _rns_matvec_kernel(kA: int, kB: int, ainv_r: int, window: int,
+                       levels: int, nrows: int,
+                       u_ref, dig_ref, mods_ref, tb_ref, ta_ref, vecs_ref,
+                       one_ref, o_ref):
+    u = u_ref[...]                               # (nrows, CH) scaled cts
+    digs = dig_ref[...]                          # (levels, nrows, TM)
+    one = one_ref[...]                           # (1, CH)
+    mm = _rns_mm(mods_ref[...], tb_ref[...], ta_ref[...], vecs_ref[...],
+                 kA, kB, ainv_r)
+    TM = o_ref.shape[0]
+    CH = u.shape[1]
+    npow = 1 << window
+
+    # power table c_i^j·B for j < 2^window: (npow, nrows, CH) in VMEM
+    table = jnp.zeros((npow, nrows, CH), _U32)
+    table = table.at[0].set(jnp.broadcast_to(one, (nrows, CH)))
+    table = table.at[1].set(u)
+
+    def build(j, tab):
+        prev = jax.lax.dynamic_index_in_dim(tab, j - 1, axis=0,
+                                            keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(tab, mm(prev, u), j,
+                                                   axis=0)
+
+    table = jax.lax.fori_loop(2, npow, build, table)
+
+    acc = jnp.broadcast_to(one, (TM, CH))
+    for lvl in range(levels):                    # static: levels ≈ 6
+        for _ in range(window):
+            acc = mm(acc, acc)
+        dig_lvl = digs[lvl]                      # (nrows, TM)
+
+        def row(i, p):
+            di = jax.lax.dynamic_index_in_dim(dig_lvl, i, axis=0,
+                                              keepdims=False)       # (TM,)
+            row_tab = jax.lax.dynamic_index_in_dim(table, i, axis=1,
+                                                   keepdims=False)  # (npow, CH)
+            sel = jnp.broadcast_to(one, (TM, CH))
+            for j in range(1, npow):
+                sel = jnp.where((di == j)[:, None], row_tab[j][None], sel)
+            return mm(p, sel)
+
+        prod = jax.lax.fori_loop(0, nrows, row,
+                                 jnp.broadcast_to(one, (TM, CH)))
+        acc = mm(acc, prod)
+    o_ref[...] = acc                             # ·B domain — exit outside
+
+
+@functools.partial(jax.jit, static_argnames=("kA", "kB", "ainv_r",
+                                             "window", "tile_m",
+                                             "interpret"))
+def rns_he_matvec_tiled(u: jnp.ndarray, digits: jnp.ndarray,
+                        mods: jnp.ndarray, t_b: jnp.ndarray,
+                        t_a: jnp.ndarray, vecs: jnp.ndarray,
+                        one: jnp.ndarray, *, kA: int, kB: int,
+                        ainv_r: int, window: int,
+                        tile_m: int = DEFAULT_TILE_M,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Fused windowed HE matvec on channel states.  u: (nrows, CH) the
+    ciphertexts via `rns.to_rns_scaled`; digits: (levels, nrows, m)
+    MSB-first window digits.  Returns (m, CH) ·B-domain channel states of
+    the column products — chunk-⊕, exit, and `rns.from_rns` happen in
+    ops.py."""
+    levels, nrows, m = digits.shape
+    CH = u.shape[1]
+    assert m % tile_m == 0, "pad m to a tile multiple in ops.py"
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        functools.partial(_rns_matvec_kernel, kA, kB, ainv_r, window,
+                          levels, nrows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nrows, CH), lambda i: (0, 0)),
+            pl.BlockSpec((levels, nrows, tile_m), lambda i: (0, 0, i)),
+            pl.BlockSpec((1, CH), lambda i: (0, 0)),
+            pl.BlockSpec(t_b.shape, lambda i: (0, 0)),
+            pl.BlockSpec(t_a.shape, lambda i: (0, 0)),
+            pl.BlockSpec((6, CH), lambda i: (0, 0)),
+            pl.BlockSpec((1, CH), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, CH), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, CH), jnp.uint32),
+        interpret=interpret,
+    )(u, digits, mods.reshape(1, CH), t_b, t_a, vecs, one.reshape(1, CH))
+
+
+def _rns_fixb_kernel(kA: int, kB: int, ainv_r: int, window: int,
+                     levels: int,
+                     tab_ref, dig_ref, mods_ref, tb_ref, ta_ref, vecs_ref,
+                     one_ref, exit_ref, o_ref):
+    tab = tab_ref[...]                           # (levels, npow, CH)
+    digs = dig_ref[...]                          # (TB, levels) LSB-first
+    one = one_ref[...]                           # (1, CH)
+    mm = _rns_mm(mods_ref[...], tb_ref[...], ta_ref[...], vecs_ref[...],
+                 kA, kB, ainv_r)
+    TB = digs.shape[0]
+    CH = tab.shape[-1]
+    npow = 1 << window
+    acc0 = jnp.broadcast_to(one, (TB, CH))
+
+    def step(lvl, acc):
+        t_lvl = jax.lax.dynamic_index_in_dim(tab, lvl, axis=0,
+                                             keepdims=False)  # (npow, CH)
+        d = jax.lax.dynamic_slice_in_dim(digs, lvl, 1, axis=1)  # (TB, 1)
+        # digit 0 selects table[lvl][0] = one — mm(acc, one) is identity
+        sel = jnp.broadcast_to(one, (TB, CH))
+        for j in range(1, npow):
+            sel = jnp.where(d == j, t_lvl[j][None], sel)
+        return mm(acc, sel)
+
+    acc = jax.lax.fori_loop(0, levels, step, acc0)
+    o_ref[...] = mm(acc, exit_ref[...])          # h^e·B ↦ h^e·R
+
+
+@functools.partial(jax.jit, static_argnames=("kA", "kB", "ainv_r",
+                                             "window", "tile_b",
+                                             "interpret"))
+def rns_fixed_base_tiled(table: jnp.ndarray, digits: jnp.ndarray,
+                         mods: jnp.ndarray, t_b: jnp.ndarray,
+                         t_a: jnp.ndarray, vecs: jnp.ndarray,
+                         one: jnp.ndarray, exitc: jnp.ndarray, *,
+                         kA: int, kB: int, ainv_r: int, window: int,
+                         tile_b: int = DEFAULT_TILE_B,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Fixed-base windowed exponentiation from a prepared ·B-domain
+    table (levels, 2^window, CH); digits: (batch, levels) LSB-first
+    base-2^window digits of the exponent.  Returns the channel state of
+    h^e·R — finish with `rns.from_rns` outside.  The whole walk is one
+    table-lookup ⊕ per level: ~levels RNS rounds instead of 2·nbits
+    ladder rounds."""
+    batch, levels = digits.shape
+    CH = table.shape[-1]
+    npow = 1 << window
+    assert table.shape == (levels, npow, CH)
+    assert batch % tile_b == 0, "pad batch to a tile multiple in ops.py"
+    grid = (batch // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_rns_fixb_kernel, kA, kB, ainv_r, window,
+                          levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((levels, npow, CH), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tile_b, levels), lambda i: (i, 0)),
+            pl.BlockSpec((1, CH), lambda i: (0, 0)),
+            pl.BlockSpec(t_b.shape, lambda i: (0, 0)),
+            pl.BlockSpec(t_a.shape, lambda i: (0, 0)),
+            pl.BlockSpec((6, CH), lambda i: (0, 0)),
+            pl.BlockSpec((1, CH), lambda i: (0, 0)),
+            pl.BlockSpec((1, CH), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, CH), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, CH), jnp.uint32),
+        interpret=interpret,
+    )(table, digits, mods.reshape(1, CH), t_b, t_a, vecs,
+      one.reshape(1, CH), exitc.reshape(1, CH))

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.crypto import rns as rns_lib
+
 LIMB_BITS = 12
 MASK = (1 << LIMB_BITS) - 1
 _U32 = jnp.uint32
@@ -109,3 +111,52 @@ def montmul_tiled(a: jnp.ndarray, b: jnp.ndarray, n: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((batch, L), jnp.uint32),
         interpret=interpret,
     )(a, b, n.reshape(1, L))
+
+
+# ---------------------------------------------------------------------------
+# RNS channel-domain kernel — the compiled pipeline (crypto/rns.py)
+# ---------------------------------------------------------------------------
+#
+# Where the CIOS kernel above runs L sequential carry-coupled rounds, the
+# RNS kernel is ONE round of channel-pointwise math plus two exact f32
+# matmuls (the base extensions) — the shape the MXU wants.  The body is
+# `rns.montmul_channels` traced inline, so the kernel and the jnp library
+# path are the same arithmetic by construction.  Conversions limbs ↔
+# channels stay outside the kernel (ops.py), amortized across ladder /
+# matvec steps.
+
+def _rns_kernel(kA: int, kB: int, ainv_r: int,
+                x_ref, y_ref, mods_ref, tb_ref, ta_ref, vecs_ref, o_ref):
+    o_ref[...] = rns_lib.montmul_channels(
+        x_ref[...], y_ref[...], mods_ref[...], tb_ref[...], ta_ref[...],
+        vecs_ref[...], kA=kA, kB=kB, ainv_r=ainv_r)
+
+
+@functools.partial(jax.jit, static_argnames=("kA", "kB", "ainv_r",
+                                             "tile_b", "interpret"))
+def rns_montmul_tiled(x: jnp.ndarray, y: jnp.ndarray, mods: jnp.ndarray,
+                      t_b: jnp.ndarray, t_a: jnp.ndarray,
+                      vecs: jnp.ndarray, *, kA: int, kB: int, ainv_r: int,
+                      tile_b: int = DEFAULT_TILE_B,
+                      interpret: bool = True) -> jnp.ndarray:
+    """x, y: (batch, CH) channel states < (kB+2)·N (y usually entered via
+    `rns.to_rns_scaled`).  Returns the channel state of x·y·B⁻¹, same
+    bound.  batch must be a multiple of tile_b (ops.py pads)."""
+    batch, CH = x.shape
+    assert batch % tile_b == 0, "pad batch to a tile multiple in ops.py"
+    grid = (batch // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_rns_kernel, kA, kB, ainv_r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, CH), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, CH), lambda i: (i, 0)),
+            pl.BlockSpec((1, CH), lambda i: (0, 0)),
+            pl.BlockSpec(t_b.shape, lambda i: (0, 0)),
+            pl.BlockSpec(t_a.shape, lambda i: (0, 0)),
+            pl.BlockSpec((6, CH), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, CH), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, CH), jnp.uint32),
+        interpret=interpret,
+    )(x, y, mods.reshape(1, CH), t_b, t_a, vecs)

@@ -26,6 +26,12 @@ what actually crosses the wire.  `--checkpoint-dir` (socket) enables
 party-local checkpoints in the measured run and reports the cadence;
 adding `--resume` runs the kill-and-resume drill and reports the
 `resume_verdict` (docs/fault_tolerance.md).
+
+`--tables PATH` builds (or loads) the persistent fixed-base noise table
+for a real keypair at `--key-bits` and reports its build time, on-disk
+size, and the per-iteration modexp savings of the h^ρ table walk over
+the r^n ladder next to the analytic `protocol_comm` table — the
+deployment-economics view of docs/engine.md §fixed-base tables.
 """
 import os
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
@@ -291,6 +297,60 @@ def measured_comm(transport: str, features: int, key_bits: int,
     return out
 
 
+def tables_report(path: str, key_bits: int, engine_name: str,
+                  nb: int, m: int) -> dict:
+    """Fixed-base noise-table economics for a REAL keypair at
+    `key_bits`: one-time build cost + on-disk size of the persistent
+    table (`crypto/fixed_base.py`), and the measured per-noise modexp
+    cost of the h^ρ table walk vs the r^n library ladder, scaled to one
+    iteration's noise demand (nb ciphertexts for the CP's [[⟨d⟩]] + m
+    for the non-CP masked-matvec leg) — the column that sits next to
+    the analytic `protocol_comm` table."""
+    import numpy as np
+    from repro.crypto import fixed_base, paillier
+
+    t0 = time.time()
+    key = paillier.keygen(key_bits, seed=0)
+    keygen_s = time.time() - t0
+    pub = key.pub
+    t0 = time.time()
+    table, built = fixed_base.ensure_table(pub.n, pub.mod_n2, path,
+                                           rng=np.random.default_rng(1))
+    build_s = time.time() - t0
+    eng = engine_mod.make(engine_name)
+    rng = np.random.default_rng(2)
+    batch = 4
+    ladder = jax.jit(lambda rr: paillier.noise_to_mont(pub, rr, eng))
+    raw = jnp.asarray(paillier.raw_noise(pub, batch, rng))
+    jax.block_until_ready(ladder(raw))            # compile
+    t0 = time.time()
+    jax.block_until_ready(ladder(raw))
+    ladder_us = (time.time() - t0) * 1e6 / batch
+    digits = jnp.asarray(fixed_base.draw_exponent_digits(table, batch, rng))
+    jax.block_until_ready(
+        paillier.noise_from_table(pub, table, digits, eng))
+    t0 = time.time()
+    jax.block_until_ready(
+        paillier.noise_from_table(pub, table, digits, eng))
+    table_us = (time.time() - t0) * 1e6 / batch
+    noise_per_iter = nb + m                       # k=2: CP nb + one leg m
+    return {
+        "path": path, "built_now": built, "engine": engine_name,
+        "key_bits": key_bits,
+        "keygen_s": round(keygen_s, 2),
+        "build_s": round(build_s, 2),
+        "bytes_on_disk": os.path.getsize(path),
+        "window": table.window, "levels": table.levels,
+        "exp_bits": table.exp_bits,
+        "ladder_us_per_noise": round(ladder_us, 1),
+        "table_us_per_noise": round(table_us, 1),
+        "speedup": round(ladder_us / table_us, 1),
+        "noise_terms_per_iteration": noise_per_iter,
+        "modexp_savings_per_iteration_s": round(
+            noise_per_iter * (ladder_us - table_us) / 1e6, 2),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--samples", type=int, default=30720)
@@ -305,6 +365,13 @@ def main() -> None:
                     choices=("jnp", "pallas-interpret", "pallas"),
                     help="crypto compute engine for the Montgomery "
                          "products (jnp keeps the cost model exact)")
+    ap.add_argument("--tables", default=None, metavar="PATH",
+                    help="build/load the persistent fixed-base noise "
+                         "table for a real keypair at --key-bits and "
+                         "report build time, on-disk size, and the "
+                         "per-iteration modexp savings of h^ρ table "
+                         "walks vs the r^n ladder (docs/engine.md "
+                         "§fixed-base tables)")
     ap.add_argument("--mesh", default="2x16x16",
                     help="pod×data×model mesh shape, e.g. 2x16x16 "
                          "(pod = party; product ≤ 512)")
@@ -430,6 +497,9 @@ def main() -> None:
         **roofline_terms(flops, float(hbm), float(coll)),
         "ok": True,
     }
+    if args.tables:
+        res["fixed_base_tables"] = tables_report(
+            args.tables, args.key_bits, args.engine, nb=n, m=m)
     if args.transport != "none":
         res["measured_comm"] = measured_comm(
             args.transport, m, args.key_bits,
