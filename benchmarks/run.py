@@ -21,6 +21,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 BENCH_CRYPTO_PATH = REPO_ROOT / "BENCH_crypto.json"
 BENCH_WIRE_PATH = REPO_ROOT / "BENCH_wire.json"
 BENCH_CHECKPOINT_PATH = REPO_ROOT / "BENCH_checkpoint.json"
+BENCH_WAN_PATH = REPO_ROOT / "BENCH_wan.json"
 
 
 def _csv(name: str, us: float, derived: str = "") -> None:
@@ -182,6 +183,19 @@ def bench_checkpoint(_: bool, smoke: bool = False) -> None:
     print(f"# wrote {BENCH_CHECKPOINT_PATH}")
 
 
+def bench_wan(_: bool, smoke: bool = False) -> None:
+    """Measured socket training under shaped WAN profiles vs the
+    analytic rounds × RTT model; full mode writes BENCH_wan.json."""
+    from benchmarks import wan_bench
+    report = wan_bench.run(smoke=smoke)
+    for r in report["rows"]:
+        _csv(r["name"], r["us"], r["derived"])
+    if smoke:
+        print(f"# smoke mode: {BENCH_WAN_PATH.name} not written")
+        return
+    print(f"# wrote {wan_bench.write_report(report)}")
+
+
 def bench_roofline(_: bool) -> None:
     from benchmarks import roofline
     rows = roofline.run()
@@ -208,6 +222,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "wire": bench_wire,
     "checkpoint": bench_checkpoint,
+    "wan": bench_wan,
     "roofline": bench_roofline,
 }
 
@@ -231,7 +246,7 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         try:
-            if name in ("kernels", "wire", "checkpoint"):
+            if name in ("kernels", "wire", "checkpoint", "wan"):
                 fn(args.paper, smoke=args.smoke)
             else:
                 fn(args.paper)

@@ -48,4 +48,11 @@ python examples/distributed_training.py --smoke >/dev/null
 python -m benchmarks.run --only checkpoint --smoke >/dev/null
 python examples/resumable_training.py --smoke >/dev/null
 
+# Chaos smoke: a k=3 socket training run through the shaped chaos link
+# layer (FaultyTransport, runtime/chaos.py) must finish with identical
+# losses/meters/rounds to the unshaped baseline — the bench asserts all
+# three.  The full fault gauntlet (drops/dups/reorders/resets/partition
+# + SIGKILL, bit-identical) is tests/test_chaos.py in the sweep below.
+python -m benchmarks.run --only wan --smoke >/dev/null
+
 exec python -m pytest -x -q "$@"

@@ -49,6 +49,12 @@ class VFLConfig:
     checkpoint_every: int = 0         # party-local checkpoint cadence in
                                       # iterations (0 = off); operational,
                                       # excluded from session.config_hash
+    wire_compression: str = "none"    # socket-wire frame deflation:
+                                      # "none" | "zlib" — LOSSLESS only,
+                                      # validated by distributed.
+                                      # compression.validate_wire_scheme;
+                                      # below the metering boundary, so
+                                      # also excluded from config_hash
 
 
 @dataclasses.dataclass

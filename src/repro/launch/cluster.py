@@ -41,17 +41,26 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.comm import CommMeter
+from repro.distributed import compression as comp_lib
+from repro.runtime import chaos as chaos_lib
 from repro.runtime import messages as msg
 from repro.runtime import netparty, seeds
 from repro.runtime.codec import Codec
 from repro.runtime.netparty import CONDUCTOR, IO_TIMEOUT_S
+from repro.runtime.policy import RetryPolicy
 from repro.runtime.scheduler import mask_bound_bits, validate_key_bits
 from repro.runtime.transport import SocketTransport
 
 
 class ClusterError(RuntimeError):
     """A party process failed (carries the remote traceback if it
-    managed to ship one)."""
+    managed to ship one).  `party` attributes the failure to a party
+    name when the conductor can tell which one — the supervisor's
+    flap-quarantine accounting keys on it (None = unattributed)."""
+
+    def __init__(self, message: str, party: str | None = None):
+        super().__init__(message)
+        self.party = party
 
 
 class FatalClusterError(ClusterError):
@@ -82,8 +91,10 @@ class SocketCluster:
     """
 
     def __init__(self, parties: Sequence, y: np.ndarray, cfg,
-                 host: str = "127.0.0.1", io_timeout: float = IO_TIMEOUT_S,
-                 checkpoint_dir: str | None = None, resume: bool = False):
+                 host: str = "127.0.0.1",
+                 io_timeout: float | None = None,
+                 checkpoint_dir: str | None = None, resume: bool = False,
+                 policy: RetryPolicy | None = None, chaos=None):
         assert parties[0].name == "C", "parties[0] must be C"
         validate_key_bits(cfg, mask_bound_bits(cfg))   # fail before spawning
         self.parties = list(parties)
@@ -91,7 +102,20 @@ class SocketCluster:
         self.y = np.asarray(y, np.float64)
         self.cfg = cfg
         self.host = host
-        self.io_timeout = io_timeout
+        # ONE policy block owns every timeout/heartbeat/backoff constant
+        # of the cluster (runtime/policy.py); the legacy `io_timeout`
+        # float is folded into it for back-compat
+        if policy is None:
+            policy = RetryPolicy.from_env() if io_timeout is None \
+                else RetryPolicy.from_env(io_timeout_s=float(io_timeout))
+        elif io_timeout is not None:
+            policy = RetryPolicy.from_dict(
+                dict(policy.to_dict(), io_timeout_s=float(io_timeout)))
+        self.policy = policy
+        self.io_timeout = policy.io_timeout_s
+        self.chaos = chaos_lib.resolve_profile(chaos)
+        self.compression = comp_lib.validate_wire_scheme(
+            getattr(cfg, "wire_compression", "none"))
         self.checkpoint_dir = checkpoint_dir
         self.resume = resume
         #: filled by the resume handshake: agreed step + audited per-party
@@ -123,32 +147,52 @@ class SocketCluster:
             self.shutdown()
             raise
 
+    def _wire_options(self) -> dict:
+        """Link configuration shipped to every party via spawn args
+        (deadlines must exist before the handshake frame can travel)."""
+        return {"policy": self.policy.to_dict(),
+                "chaos": None if self.chaos is None else
+                self.chaos.to_dict(),
+                "compression": self.compression}
+
+    def _make_transport(self) -> SocketTransport:
+        if self.chaos is None and self.compression == "none":
+            return SocketTransport(CONDUCTOR, Codec())
+        return chaos_lib.FaultyTransport(
+            CONDUCTOR, Codec(), profile=self.chaos or None,
+            policy=self.policy, compression=self.compression)
+
     def _start(self) -> None:
         ctx = mp.get_context("spawn")
         ready: mp.queues.Queue = ctx.Queue()
+        wire = self._wire_options()
         for p in self.parties:
             y = self.y if p.name == "C" else None
             proc = ctx.Process(
                 target=netparty.run_party_server,
                 args=(p.name, np.asarray(p.X, np.float64), y, ready,
-                      self.host, self.checkpoint_dir),
+                      self.host, self.checkpoint_dir, wire),
                 name=f"vfl-party-{p.name}", daemon=True)
             proc.start()
             self.procs[p.name] = proc
         ports: dict[str, int] = {}
-        deadline = time.monotonic() + self.io_timeout
+        deadline = time.monotonic() + self.policy.connect_timeout()
         while len(ports) < len(self.names):
             try:
-                name, port = ready.get(timeout=1.0)
+                name, port = ready.get(timeout=self.policy.poll_interval_s)
                 ports[name] = port
             except queue_lib.Empty:
                 self._check_alive()
                 if time.monotonic() > deadline:
-                    raise ClusterError("timed out waiting for party ports")
-        self.tp = SocketTransport(CONDUCTOR, Codec())
+                    missing = sorted(set(self.names) - set(ports))
+                    raise ClusterError(
+                        "timed out waiting for party ports",
+                        party=missing[0] if len(missing) == 1 else None)
+        self.tp = self._make_transport()
         for name in self.names:
-            s = socket.create_connection((self.host, ports[name]),
-                                         timeout=self.io_timeout)
+            s = socket.create_connection(
+                (self.host, ports[name]),
+                timeout=self.policy.connect_timeout())
             s.settimeout(self.io_timeout)
             s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             self.tp.attach(name, s)
@@ -171,7 +215,7 @@ class SocketCluster:
             self._resume_handshake(ready)
         # conductor→party keep-alives: an idle party's event-queue timeout
         # stays a genuine failure detector during long quiet phases
-        hb = min(self.io_timeout / 3.0, 30.0)
+        hb = self.policy.heartbeat_interval()
         for name in self.names:
             self.tp.start_heartbeat(name, hb)
 
@@ -227,7 +271,11 @@ class SocketCluster:
                     except Exception:        # noqa: BLE001 — best effort
                         pass
                 try:
-                    self._collect("bye", timeout=10.0)
+                    self._collect("bye", timeout=self.policy.bye_timeout_s)
+                except Exception:            # noqa: BLE001
+                    pass
+                try:                         # drain shaped egress (acks)
+                    self.tp.flush(timeout=self.policy.bye_timeout_s)
                 except Exception:            # noqa: BLE001
                     pass
             self.tp.close()
@@ -235,10 +283,10 @@ class SocketCluster:
         for proc in self.procs.values():
             if force and proc.is_alive():
                 proc.kill()
-            proc.join(timeout=10.0)
+            proc.join(timeout=self.policy.join_timeout_s)
             if proc.is_alive():
                 proc.terminate()
-                proc.join(timeout=5.0)
+                proc.join(timeout=self.policy.term_timeout_s)
         self.procs.clear()
         self._started = False
 
@@ -248,29 +296,59 @@ class SocketCluster:
         the run back bit-identically from party-local checkpoints)."""
         proc = self.procs[name]
         proc.kill()
-        proc.join(timeout=5.0)
+        proc.join(timeout=self.policy.term_timeout_s)
 
     # -- control-plane plumbing --------------------------------------------
+    def _blame(self, payload: dict) -> str | None:
+        """Pick the party a reported failure is attributed to.  A process
+        that died from a signal (negative exitcode) is the root cause —
+        collateral crashes exit 1 after filing their report, and the
+        victim itself never files one.  Failing that, a peer whose link
+        died outranks the reporter; last resort is the reporter itself."""
+        victims = [n for n, p in self.procs.items()
+                   if p.exitcode is not None and p.exitcode < 0]
+        if len(victims) == 1:
+            return victims[0]
+        peer = payload.get("peer")
+        if peer in self.names:
+            return peer
+        return payload.get("party")
+
     def _check_alive(self) -> None:
-        for name, proc in self.procs.items():
-            if proc.exitcode not in (None, 0):
-                raise ClusterError(
-                    f"party {name} exited with code {proc.exitcode}")
+        dead = {n: p.exitcode for n, p in self.procs.items()
+                if p.exitcode not in (None, 0)}
+        if not dead:
+            return
+        # a signal death (SIGKILL/OOM) is the root cause; parties that
+        # exited 1 afterwards are collateral of the lost links
+        victims = [n for n, code in dead.items() if code < 0]
+        name = victims[0] if len(victims) == 1 else next(iter(dead))
+        raise ClusterError(
+            f"party {name} exited with code {dead[name]} "
+            f"(all non-zero exits: {dead})",
+            party=name)
 
     def _collect(self, kind: str, timeout: float | None = None
                  ) -> dict[str, msg.Control]:
-        """One control frame of `kind` from every party."""
+        """One control frame of `kind` from every party.  Failures are
+        attributed to a party (`ClusterError.party`) whenever the
+        conductor can tell which one caused them — the supervisor's
+        quarantine accounting depends on it."""
         got: dict[str, msg.Control] = {}
-        deadline = time.monotonic() + (timeout or self.io_timeout)
+        if timeout is None:
+            timeout = self.policy.deadline_for(kind)
+        deadline = time.monotonic() + timeout
         while len(got) < len(self.names):
             try:
-                m = self.tp.inbound.get(timeout=1.0)
+                m = self.tp.inbound.get(
+                    timeout=self.policy.poll_interval_s)
             except queue_lib.Empty:
                 self._check_alive()
                 if time.monotonic() > deadline:
                     missing = sorted(set(self.names) - set(got))
                     raise ClusterError(
-                        f"timed out waiting for {kind!r} from {missing}")
+                        f"timed out waiting for {kind!r} from {missing}",
+                        party=missing[0] if len(missing) == 1 else None)
                 continue
             if not isinstance(m, msg.Control):
                 raise ClusterError(
@@ -282,10 +360,12 @@ class SocketCluster:
                     else ClusterError
                 raise cls(
                     f"party {m.payload.get('party')} failed:\n"
-                    f"{m.payload.get('traceback')}")
+                    f"{m.payload.get('traceback')}",
+                    party=self._blame(m.payload))
             if m.kind == "__closed__":
                 self._check_alive()
-                raise ClusterError(f"lost connection to {m.src}")
+                raise ClusterError(f"lost connection to {m.src}",
+                                   party=m.src)
             if m.kind != kind:
                 raise ClusterError(f"expected {kind!r}, got {m.kind!r} "
                                    f"from {m.src}")
@@ -346,6 +426,7 @@ class SocketCluster:
         weights = {}
         meter, measured = CommMeter(), CommMeter()
         overhead = 0
+        chaos_by_party: dict[str, dict] = {}
         for name, r in results.items():
             weights[name] = np.asarray(r.payload["weights"], np.float64)
             for src, dst, tag, nbytes in r.payload["sends"]:
@@ -353,6 +434,8 @@ class SocketCluster:
             for src, dst, tag, nbytes in r.payload["measured"]:
                 measured.add(src, dst, tag, nbytes)
             overhead += int(r.payload["overhead_bytes"])
+            if r.payload.get("chaos") is not None:
+                chaos_by_party[name] = r.payload["chaos"]
         # analytic latency steps (the paper's rounds column); measured
         # wall-clock is runtime_s
         _, rounds_per_iter = msg.iteration_traffic(
@@ -368,6 +451,20 @@ class SocketCluster:
             rounds=rounds_per_iter * it)
         res.measured_meter = measured
         res.wire_overhead_bytes = overhead
+        stats = getattr(self.tp, "chaos_stats", None)
+        if stats is not None:
+            chaos_by_party[CONDUCTOR] = stats.to_dict()
+        if chaos_by_party:
+            # per-endpoint link-layer accounting + the fleet total —
+            # kept strictly apart from the protocol meters above
+            res.chaos_report = {
+                "profile": None if self.chaos is None
+                else self.chaos.to_dict(),
+                "compression": self.compression,
+                "by_endpoint": chaos_by_party,
+                "total": chaos_lib.ChaosStats.merge(
+                    chaos_by_party.values()),
+            }
         return res
 
     # -- serving ------------------------------------------------------------
@@ -405,10 +502,12 @@ class SocketCluster:
             if m.kind == "error":
                 raise ClusterError(
                     f"party {m.payload.get('party')} failed:\n"
-                    f"{m.payload.get('traceback')}")
+                    f"{m.payload.get('traceback')}",
+                    party=self._blame(m.payload))
             if m.kind == "__closed__":
                 self._check_alive()
-                raise ClusterError(f"lost connection to {m.src}")
+                raise ClusterError(f"lost connection to {m.src}",
+                                   party=m.src)
             raise ClusterError(
                 f"expected 'score_result', got {m.kind!r} from {m.src}")
 
@@ -416,10 +515,12 @@ class SocketCluster:
 def train_vfl_socket(parties: Sequence, y: np.ndarray, cfg,
                      host: str = "127.0.0.1",
                      checkpoint_dir: str | None = None,
-                     resume: bool = False):
+                     resume: bool = False, policy: RetryPolicy | None = None,
+                     chaos=None):
     """One-call distributed training: spawn, train, tear down."""
     with SocketCluster(parties, y, cfg, host=host,
-                       checkpoint_dir=checkpoint_dir, resume=resume) as cl:
+                       checkpoint_dir=checkpoint_dir, resume=resume,
+                       policy=policy, chaos=chaos) as cl:
         res = cl.train()
         res.resume_report = dict(cl.resume_report)
         return res
@@ -429,8 +530,13 @@ def train_vfl_socket_resilient(parties: Sequence, y: np.ndarray, cfg,
                                checkpoint_dir: str,
                                host: str = "127.0.0.1",
                                max_restarts: int = 3,
-                               kill_plan: dict[int, str] | None = None):
-    """Supervised distributed training: survive party-process crashes.
+                               kill_plan: dict[int, str] | None = None,
+                               policy: RetryPolicy | None = None,
+                               chaos=None,
+                               standby: dict[str, object] | None = None,
+                               flap_threshold: int = 2):
+    """Supervised distributed training: survive party-process crashes,
+    quarantine flapping parties, and admit standby replacements.
 
     Restart policy: on ANY cluster failure (party killed, wedged, or
     errored) the supervisor force-kills the remaining party processes,
@@ -443,21 +549,45 @@ def train_vfl_socket_resilient(parties: Sequence, y: np.ndarray, cfg,
     recovery to make progress; with it 0, every restart replays from
     scratch.
 
-    Returns the final `TrainResult` with `res.restarts` (count) and
-    `res.resume_report` (last handshake audit) attached.  Raises the
+    Elastic epochs: failures attributed to a party
+    (`ClusterError.party`) are counted; once a party has caused
+    `flap_threshold` failures and `standby` holds a replacement for it
+    (a `PartyData`-shaped replica with the SAME name and feature block
+    — vertical FL fixes each party's columns, so a replacement is a
+    standby replica of the role, not an arbitrary node), the flapping
+    party is quarantined: the replacement object takes its roster slot
+    at the restart boundary, and `distributed.elastic
+    .party_handoff_plan` records exactly which checkpoint files the
+    replacement resumes from.  The epoch boundary IS the restart/resume
+    boundary, so admission never happens mid-iteration.
+
+    Returns the final `TrainResult` with `res.restarts` (count),
+    `res.resume_report` (last handshake audit), `res.failures`
+    (per-party attributed counts), and — when quarantines happened —
+    `res.quarantined` ({name: handoff plan}) attached.  Raises the
     final `ClusterError` after `max_restarts` consecutive failures.
     """
+    import collections as _collections
+
     attempt = 0
     resume = False
+    roster = list(parties)
+    standby = dict(standby or {})
+    failures: dict[str, int] = _collections.Counter()
+    quarantined: dict[str, dict] = {}
     while True:
-        cl = SocketCluster(parties, y, cfg, host=host,
-                           checkpoint_dir=checkpoint_dir, resume=resume)
+        cl = SocketCluster(roster, y, cfg, host=host,
+                           checkpoint_dir=checkpoint_dir, resume=resume,
+                           policy=policy, chaos=chaos)
         try:
             cl.start()
             res = cl.train(kill_plan=kill_plan)
             cl.shutdown()
             res.restarts = attempt
             res.resume_report = dict(cl.resume_report)
+            res.failures = dict(failures)
+            if quarantined:
+                res.quarantined = dict(quarantined)
             return res
         except (ClusterError, OSError) as e:
             cl.shutdown(force=True)
@@ -471,6 +601,24 @@ def train_vfl_socket_resilient(parties: Sequence, y: np.ndarray, cfg,
             attempt += 1
             if attempt > max_restarts:
                 raise
+            culprit = getattr(e, "party", None)
+            if culprit is not None:
+                failures[culprit] += 1
+                if (failures[culprit] >= flap_threshold
+                        and culprit in standby
+                        and culprit not in quarantined):
+                    # graceful degradation: stop restarting the flapping
+                    # process image; admit its standby replica with a
+                    # recorded state-handoff plan
+                    from repro.distributed import elastic
+                    replacement = standby.pop(culprit)
+                    assert getattr(replacement, "name", None) == culprit, \
+                        "standby replacement must keep the party's name " \
+                        "(vertical FL fixes each party's feature columns)"
+                    roster = [replacement if p.name == culprit else p
+                              for p in roster]
+                    quarantined[culprit] = elastic.party_handoff_plan(
+                        checkpoint_dir, culprit)
             resume = True
         except BaseException:
             # anything else (caller bug, KeyboardInterrupt) must not
@@ -498,6 +646,9 @@ def main() -> None:
     ap.add_argument("--he", default="mock", choices=("mock", "paillier"))
     ap.add_argument("--key-bits", type=int, default=256)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--chaos", default=None,
+                    choices=sorted(chaos_lib.PROFILES),
+                    help="run under a named chaos/shaping profile")
     args = ap.parse_args()
 
     if args.glm in ("poisson", "gamma"):
@@ -513,8 +664,9 @@ def main() -> None:
                     key_bits=args.key_bits, tol=0.0, seed=args.seed)
 
     print(f"spawning {args.parties} party processes + conductor "
-          f"({args.he} backend)…")
-    res = train_vfl_socket(parties, y, cfg)
+          f"({args.he} backend"
+          + (f", chaos={args.chaos}" if args.chaos else "") + ")…")
+    res = train_vfl_socket(parties, y, cfg, chaos=args.chaos)
     print(f"iterations : {res.n_iter}   losses: "
           f"{[round(v, 4) for v in res.losses]}")
     print(f"wall clock : {res.runtime_s:.2f}s")
@@ -524,6 +676,18 @@ def main() -> None:
               f"measured {res.measured_meter.by_tag[tag]:>10d} B")
     print(f"frame overhead (preludes+headers, unmetered): "
           f"{res.wire_overhead_bytes} B")
+    report = getattr(res, "chaos_report", None)
+    if report is not None:
+        t = report["total"]
+        print("chaos link layer (injected / recovered, unmetered):")
+        print(f"  injected : {t.get('drops', 0)} drops, "
+              f"{t.get('dups', 0)} dups, {t.get('reorders', 0)} reorders, "
+              f"{t.get('resets', 0)} resets, "
+              f"{t.get('partitions', 0)} partitions")
+        print(f"  recovery : {t.get('retransmits', 0)} retransmits "
+              f"({t.get('retransmit_bytes', 0)} B), "
+              f"{t.get('acks_sent', 0)} acks, "
+              f"backoff {t.get('backoff_total_s', 0.0):.2f}s")
 
 
 if __name__ == "__main__":

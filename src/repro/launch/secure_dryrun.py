@@ -25,7 +25,10 @@ bytes are counted off real encoded TCP frames between party processes
 what actually crosses the wire.  `--checkpoint-dir` (socket) enables
 party-local checkpoints in the measured run and reports the cadence;
 adding `--resume` runs the kill-and-resume drill and reports the
-`resume_verdict` (docs/fault_tolerance.md).
+`resume_verdict` (docs/fault_tolerance.md).  `--chaos PROFILE`
+(socket) routes the measured run through the fault-injection link
+layer (`runtime.chaos`) and reports injected faults, ARQ recovery
+work, and whether the meters survived bit-exact.
 
 `--tables PATH` builds (or loads) the persistent fixed-base noise table
 for a real keypair at `--key-bits` and reports its build time, on-disk
@@ -193,7 +196,8 @@ def make_secure_grad_step(mesh, mod: Modulus, width: int, window: int = 1,
 
 def measured_comm(transport: str, features: int, key_bits: int,
                   samples: int = 256, checkpoint_dir: str | None = None,
-                  resume_drill: bool = False) -> dict:
+                  resume_drill: bool = False,
+                  chaos: str | None = None) -> dict:
     """One *measured* 2-party training iteration on a runtime transport.
 
     Mirrors the analytic `protocol_comm` shape (2 parties, `features`
@@ -211,6 +215,14 @@ def measured_comm(transport: str, features: int, key_bits: int,
     resume from the checkpoints, and reports whether the recovered run
     is bit-identical to an uninterrupted single-process reference — the
     `resume_verdict` column of the dry-run table.
+
+    `chaos` (socket only) names a `runtime.chaos.PROFILES` entry and
+    runs the measured iteration through the fault-injection link layer
+    (`FaultyTransport`): the report gains a `chaos` block with injected
+    fault counts, ARQ recovery work (retransmits, backoff), and a
+    `chaos_verdict` — `recovered_bit_exact` iff the per-tag meters
+    still equal the analytic table despite the injected faults
+    (docs/fault_tolerance.md §chaos).
     """
     import numpy as np
     from repro.core.trainer import PartyData, VFLConfig, train_vfl
@@ -247,10 +259,11 @@ def measured_comm(transport: str, features: int, key_bits: int,
             if checkpointing and resume_drill:
                 res = train_vfl_socket_resilient(
                     parties, y, cfg, checkpoint_dir=checkpoint_dir,
-                    kill_plan={1: "B1"})
+                    kill_plan={1: "B1"}, chaos=chaos)
             else:
                 res = train_vfl_socket(parties, y, cfg,
-                                       checkpoint_dir=checkpoint_dir)
+                                       checkpoint_dir=checkpoint_dir,
+                                       chaos=chaos)
         finally:
             if saved is not None:
                 os.environ["XLA_FLAGS"] = saved
@@ -294,6 +307,20 @@ def measured_comm(transport: str, features: int, key_bits: int,
         n_parties=2, nb=nb, m_per_party=features, key_bits=key_bits)
     out["matches_analytic"] = measured == {
         k: v * res.n_iter for k, v in analytic.items()}
+    report = getattr(res, "chaos_report", None)
+    if report is not None:
+        t = report["total"]
+        out["chaos"] = {
+            "profile": chaos,
+            "injected": {k: t.get(k, 0) for k in
+                         ("drops", "dups", "reorders", "resets",
+                          "partitions")},
+            "retransmits": t.get("retransmits", 0),
+            "rx_dups": t.get("rx_dups", 0),
+            "backoff_total_s": round(t.get("backoff_total_s", 0.0), 3),
+            "chaos_verdict": ("recovered_bit_exact"
+                              if out["matches_analytic"] else "DIVERGED"),
+        }
     return out
 
 
@@ -389,6 +416,13 @@ def main() -> None:
                     help="(with --checkpoint-dir) kill a party mid-run, "
                          "resume via the supervisor, and report the "
                          "resume verdict (bit_identical | DIVERGED)")
+    from repro.runtime.chaos import PROFILES
+    ap.add_argument("--chaos", default=None, choices=sorted(PROFILES),
+                    help="(socket transport) run the measured iteration "
+                         "through the fault-injection link layer with "
+                         "this runtime.chaos profile and report injected "
+                         "faults, ARQ recovery work, and the chaos "
+                         "verdict next to the measured comm table")
     ap.add_argument("--out", default="results/secure_dryrun.json")
     args = ap.parse_args()
 
@@ -398,6 +432,9 @@ def main() -> None:
                          "processes)")
     if args.resume and not args.checkpoint_dir:
         raise SystemExit("--resume needs --checkpoint-dir")
+    if args.chaos and args.transport != "socket":
+        raise SystemExit("--chaos needs --transport socket (the fault-"
+                         "injection link layer wraps the TCP transport)")
     try:
         dims = tuple(int(v) for v in args.mesh.lower().split("x"))
         assert len(dims) == 3 and all(d >= 1 for d in dims)
@@ -504,7 +541,7 @@ def main() -> None:
         res["measured_comm"] = measured_comm(
             args.transport, m, args.key_bits,
             checkpoint_dir=args.checkpoint_dir,
-            resume_drill=args.resume)
+            resume_drill=args.resume, chaos=args.chaos)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1)

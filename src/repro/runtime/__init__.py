@@ -11,8 +11,11 @@ docs/protocols.md for the paper ↔ code map, and docs/transports.md for
 the wire format and distributed deployment.
 """
 from repro.runtime import messages
+from repro.runtime.chaos import (ChaosProfile, ChaosStats, FaultSchedule,
+                                 FaultyTransport)
 from repro.runtime.codec import Codec, CodecError
 from repro.runtime.party import CPState, DataParty, LabelParty, Party
+from repro.runtime.policy import RetryPolicy
 from repro.runtime.scheduler import (TransportDealer, VFLScheduler,
                                      mask_bound_bits, validate_key_bits)
 from repro.runtime.session import TrainState, config_hash
@@ -26,4 +29,6 @@ __all__ = [
     "validate_key_bits", "Transport", "LocalTransport",
     "PipelinedTransport", "SocketTransport", "LockedRNG",
     "Codec", "CodecError", "TrainState", "config_hash",
+    "RetryPolicy", "ChaosProfile", "ChaosStats", "FaultSchedule",
+    "FaultyTransport",
 ]

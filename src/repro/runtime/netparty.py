@@ -85,11 +85,25 @@ from repro.runtime import messages as msg
 from repro.runtime import seeds as seeds_lib
 from repro.runtime import session as session_lib
 from repro.runtime.party import DataParty, LabelParty
+from repro.runtime.policy import RetryPolicy
 from repro.runtime.scheduler import mask_bound_bits, validate_key_bits
-from repro.runtime.transport import SocketTransport, recv_frame
+from repro.runtime.transport import SocketTransport
 
 CONDUCTOR = "conductor"
-IO_TIMEOUT_S = float(os.environ.get("REPRO_WIRE_TIMEOUT_S", "300"))
+
+
+class PeerLost(RuntimeError):
+    """A transport link died mid-protocol.  `peer` names the far end so
+    the conductor can attribute the failure to the party that actually
+    vanished rather than to the collateral reporter — the supervisor's
+    flap-quarantine accounting keys on that attribution."""
+
+    def __init__(self, message: str, peer: str):
+        super().__init__(message)
+        self.peer = peer
+#: historical module constant, now derived from the central policy
+#: block (runtime/policy.py) — kept for importers
+IO_TIMEOUT_S = RetryPolicy.from_env().io_timeout_s
 
 _P1_TYPES = (msg.ZShare, msg.YShare, msg.EzShare)
 
@@ -105,15 +119,26 @@ class PartyServer:
 
     def __init__(self, name: str, X: np.ndarray,
                  y: Optional[np.ndarray] = None, host: str = "127.0.0.1",
-                 io_timeout: float = IO_TIMEOUT_S,
-                 checkpoint_dir: Optional[str] = None):
+                 io_timeout: float | None = None,
+                 checkpoint_dir: Optional[str] = None,
+                 wire: Optional[dict] = None):
         self.name = name
         self.X = np.asarray(X, np.float64)
         self.y = None if y is None else np.asarray(y, np.float64)
         if name == "C" and self.y is None:
             raise ValueError("party C must hold the label vector")
         self.host = host
-        self.io_timeout = io_timeout
+        # `wire` is the launcher-shipped link configuration: {"policy":
+        # RetryPolicy dict, "chaos": ChaosProfile dict | None,
+        # "compression": scheme}.  It rides the SPAWN ARGS, not the
+        # handshake — the party needs its deadlines before the first
+        # handshake frame can travel.
+        self.wire = dict(wire or {})
+        self.policy = RetryPolicy.from_dict(self.wire.get("policy"))
+        if io_timeout is not None:       # explicit override wins
+            self.policy = RetryPolicy.from_dict(
+                dict(self.policy.to_dict(), io_timeout_s=float(io_timeout)))
+        self.io_timeout = self.policy.io_timeout_s
         # party-LOCAL durable state: each party checkpoints only its own
         # TrainState slice under <dir>/party_<name>; shares and private
         # key material never leave the process (keys are seed-derived and
@@ -127,6 +152,7 @@ class PartyServer:
         self._p1_open = False
         self._scoring = False
         self._flags_seen = 0
+        self._unmask_served = 0
         self._dealer_draws = 0
         self._pending_p1: collections.deque = collections.deque()
         self._pending_wx: collections.deque = collections.deque()
@@ -151,28 +177,50 @@ class PartyServer:
                 self.tp.send_control(msg.Control(
                     self.name, CONDUCTOR, kind="error",
                     payload={"party": self.name, "traceback": tb,
-                             "etype": type(e).__name__}))
+                             "etype": type(e).__name__,
+                             "peer": getattr(e, "peer", None)}))
             except Exception:                    # noqa: BLE001
                 pass
             raise
         finally:
             tp = getattr(self, "tp", None)
             if tp is not None:
+                # drain the (possibly shaped) egress pipe first: the
+                # last frames out — bye, or the error report above —
+                # must actually leave before the sockets die
+                try:
+                    tp.flush(timeout=self.policy.bye_timeout_s)
+                except Exception:                # noqa: BLE001
+                    pass
                 tp.close()
+
+    def _make_transport(self) -> SocketTransport:
+        """Plain socket transport, or the chaos link layer when the
+        launcher configured fault injection / wire compression — EVERY
+        endpoint of a run must pick the same framing."""
+        chaos = self.wire.get("chaos")
+        compression = self.wire.get("compression", "none")
+        if chaos is None and compression == "none":
+            return SocketTransport(self.name, self.codec)
+        from repro.runtime.chaos import ChaosProfile, FaultyTransport
+        return FaultyTransport(
+            self.name, self.codec,
+            profile=ChaosProfile.from_dict(chaos),
+            policy=self.policy, compression=compression)
 
     def _run(self, ready_queue) -> None:
         self._listen = socket.create_server((self.host, 0), backlog=32)
-        self._listen.settimeout(self.io_timeout)
+        self._listen.settimeout(self.policy.connect_timeout())
         self.port = self._listen.getsockname()[1]
         self.codec = codec_lib.Codec(self._resolve_mod)
-        self.tp = SocketTransport(self.name, self.codec)
+        self.tp = self._make_transport()
         if ready_queue is not None:
             ready_queue.put((self.name, self.port))
 
         # conductor connects first (parties only learn the roster from
         # its handshake, so no peer can connect before it).
         conn = self._accept()
-        hello = recv_frame(conn, self.codec)
+        hello = self.tp.recv_bootstrap(conn)
         if not (isinstance(hello, msg.Control) and hello.kind == "handshake"):
             raise RuntimeError(f"{self.name}: expected handshake, got "
                                f"{getattr(hello, 'kind', type(hello))}")
@@ -184,14 +232,15 @@ class PartyServer:
         i_self = self.names.index(self.name)
         for peer in self.names[:i_self]:
             s = socket.create_connection(self.roster[peer],
-                                         timeout=self.io_timeout)
+                                         timeout=self.policy
+                                         .connect_timeout())
             s.settimeout(self.io_timeout)
             s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             self.tp.attach(peer, s)
             self.tp.send_control(msg.Control(self.name, peer, kind="hello"))
         for _ in self.names[i_self + 1:]:
             conn = self._accept()
-            first = recv_frame(conn, self.codec)
+            first = self.tp.recv_bootstrap(conn)
             if not (isinstance(first, msg.Control) and first.kind == "hello"):
                 raise RuntimeError(f"{self.name}: expected hello, got "
                                    f"{getattr(first, 'kind', type(first))}")
@@ -316,6 +365,8 @@ class PartyServer:
     def _dispatch(self, m: msg.Message) -> None:
         if isinstance(m, msg.Flag):
             self._flags_seen += 1
+        elif isinstance(m, msg.MaskedGrad):
+            self._unmask_served += 1
         self.tp.post_all(self.actor.handle(m) or [])
 
     def _pump_one(self) -> None:
@@ -324,9 +375,9 @@ class PartyServer:
         m = self._next_message()
         if isinstance(m, msg.Control):
             if m.kind == "__closed__":
-                raise RuntimeError(
+                raise PeerLost(
                     f"{self.name}: connection to {m.src} failed: "
-                    f"{m.payload.get('error')}")
+                    f"{m.payload.get('error')}", peer=m.src)
             if m.kind == "shutdown":
                 raise RuntimeError(
                     f"{self.name}: shutdown while mid-protocol")
@@ -336,15 +387,15 @@ class PartyServer:
 
     def _next_ctrl(self, expect: str | None = None) -> msg.Control:
         """Block for the next control frame, servicing protocol traffic
-        in the meantime (a CP may still owe decrypt replies after it
-        finished its own iteration)."""
+        in the meantime (a fast peer's next-iteration Protocol-1 shares
+        can beat the conductor's `iter` frame and must be stashed)."""
         while True:
             m = self._next_message()
             if isinstance(m, msg.Control):
                 if m.kind == "__closed__":
-                    raise RuntimeError(
+                    raise PeerLost(
                         f"{self.name}: connection to {m.src} failed: "
-                        f"{m.payload.get('error')}")
+                        f"{m.payload.get('error')}", peer=m.src)
                 if expect is not None and m.kind != expect \
                         and m.kind != "shutdown":
                     raise RuntimeError(
@@ -501,6 +552,7 @@ class PartyServer:
         self.jkey, *subkeys = jax.random.split(self.jkey, k * 2 + 3)
         party.begin_iteration(idx, cps, nb, self.mask_bound)
         self._flags_seen = 0
+        self._unmask_served = 0
         self._dealer_draws = 0
         is_cp = self.name in cps
         self._p1_open = is_cp
@@ -556,13 +608,21 @@ class PartyServer:
         else:
             self.dealer.skip(expected_muls)
 
-        # -- completion: weights updated; C reveals loss + flags ----------
+        # -- completion: weights updated; C reveals loss + flags.  A CP
+        # additionally drains all k-1 decrypt obligations (one MaskedGrad
+        # per other party) BEFORE acking: the durable checkpoint below
+        # snapshots the send ledger, and an UnmaskedShare reply serviced
+        # after the snapshot would vanish from the meters if this step
+        # ever becomes a resume point.
+        owed = (k - 1) if is_cp else 0
         if self.name == "C":
-            while party._pending_unmask or len(party.losses) < it + 1:
+            while party._pending_unmask or len(party.losses) < it + 1 \
+                    or self._unmask_served < owed:
                 self._pump_one()
             tp.post_all(party.emit_flags([n for n in names if n != "C"]))
         else:
-            while party._pending_unmask or not self._flags_seen:
+            while party._pending_unmask or not self._flags_seen \
+                    or self._unmask_served < owed:
                 self._pump_one()
         # durable checkpoint BEFORE the ack: once the conductor's barrier
         # sees every party's iter_done for a cadence step, every party
@@ -613,6 +673,9 @@ class PartyServer:
             "overhead_bytes": self.tp.overhead_bytes,
             "frames_sent": self.tp.frames_sent,
         }
+        stats = getattr(self.tp, "chaos_stats", None)
+        if stats is not None:
+            dump["chaos"] = stats.to_dict()
         if self.name == "C":
             dump["losses"] = [float(v) for v in self.actor.losses]
         self.tp.send_control(msg.Control(self.name, CONDUCTOR,
@@ -621,7 +684,8 @@ class PartyServer:
 
 def run_party_server(name: str, X, y, ready_queue,
                      host: str = "127.0.0.1",
-                     checkpoint_dir: str | None = None) -> None:
+                     checkpoint_dir: str | None = None,
+                     wire: dict | None = None) -> None:
     """Spawn entry point (multiprocessing 'spawn' target)."""
     PartyServer(name, X, y=y, host=host,
-                checkpoint_dir=checkpoint_dir).run(ready_queue)
+                checkpoint_dir=checkpoint_dir, wire=wire).run(ready_queue)

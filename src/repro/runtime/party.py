@@ -91,8 +91,18 @@ class CPRole:
         (the broadcast to non-CPs reuses the same ciphertext)."""
         st = self.cp
         st.ct_self = self.backend.encrypt_share(self.name, st.d_self)
-        # line 2 (local): own term X_p^T ⟨d⟩_p seeds the gradient sum
-        self._grad_acc = protocols.local_grad_share(self._feats_b, st.d_self)
+        # line 2 (local): own term X_p^T ⟨d⟩_p joins the gradient sum.
+        # Accumulate (don't assign): under WAN latency the peer CP can
+        # race ahead — for GLMs whose gradient needs no Beaver openings
+        # (logistic) its EncD round-trip can complete while this party is
+        # still collecting Protocol-1 shares, in which case the peer's
+        # unmasked term is already sitting in `_grad_acc`.
+        local = protocols.local_grad_share(self._feats_b, st.d_self)
+        self._grad_acc = local if self._grad_acc is None \
+            else ring.add(self._grad_acc, local)
+        self._grad_ready = True
+        if not self._pending_unmask:
+            self._apply_update()
         return msg.EncD(self.name, st.peer, st.ct_self,
                         n_cts=self._nb, key_bits=self.backend.key_bits(self.name),
                         key_owner=self.name)
@@ -151,6 +161,7 @@ class Party(CPRole):
         self._feats_b = None
         self._wx = None
         self._grad_acc: Optional[R64] = None
+        self._grad_ready = False
         self._masks: dict[str, R64] = {}
         self._pending_unmask: set[str] = set()
 
@@ -174,10 +185,15 @@ class Party(CPRole):
             i = cps.index(self.name)
             self.cp = CPState(index=i, peer=cps[1 - i])
             self._pending_unmask = {self.cp.peer}
+            # a CP's own X_p^T ⟨d⟩_p term lands in `announce_enc_d`; the
+            # update must wait for it even if the peer's unmasked share
+            # comes back first (see the race note there)
+            self._grad_ready = False
         else:
             self.cp = None
             self._grad_acc = ring.zeros((self.X.shape[1],))
             self._pending_unmask = set(cps)
+            self._grad_ready = True
 
     # -- Protocol 1 ---------------------------------------------------------
     def share_z(self, key) -> list[msg.Message]:
@@ -249,7 +265,7 @@ class Party(CPRole):
         self._grad_acc = term if self._grad_acc is None \
             else ring.add(self._grad_acc, term)
         self._pending_unmask.discard(m.src)
-        if not self._pending_unmask:
+        if not self._pending_unmask and self._grad_ready:
             self._apply_update()
 
     def _apply_update(self) -> None:

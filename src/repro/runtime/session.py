@@ -56,8 +56,9 @@ from repro.runtime.codec import VERSION as CODEC_VERSION
 
 #: VFLConfig fields that do not change the trained model or any derived
 #: randomness stream — excluded from the resume-compatibility hash so a
-#: resume may e.g. change the checkpoint cadence.
-_NON_SEMANTIC_CFG_FIELDS = ("checkpoint_every",)
+#: resume may e.g. change the checkpoint cadence or toggle lossless
+#: wire compression (below the metering boundary by construction).
+_NON_SEMANTIC_CFG_FIELDS = ("checkpoint_every", "wire_compression")
 
 
 def config_hash(cfg) -> str:

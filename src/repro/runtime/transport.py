@@ -313,8 +313,9 @@ class SocketTransport(Transport):
         self.inbound: "queue.Queue" = _queue.Queue()
         self._conns: dict[str, "socket.socket"] = {}
         self._send_locks: dict[str, threading.Lock] = {}
-        self._readers: list[threading.Thread] = []
+        self._readers: dict[str, threading.Thread] = {}
         self._hb_threads: list[threading.Thread] = []
+        self._stop_evt = threading.Event()
         self._closing = False
 
     # -- wiring -------------------------------------------------------------
@@ -330,22 +331,28 @@ class SocketTransport(Transport):
         stale = self._conns.pop(peer, None)
         if stale is not None:
             _close_sock(stale)
+        old_reader = self._readers.pop(peer, None)
         sock.settimeout(None)
         self._conns[peer] = sock
         self._send_locks[peer] = threading.Lock()
         t = threading.Thread(target=self._reader, args=(peer, sock),
                              name=f"wire-{self.name}-from-{peer}",
                              daemon=True)
-        self._readers.append(t)
+        self._readers[peer] = t
         t.start()
+        if old_reader is not None:       # exits on the closed stale fd
+            old_reader.join(timeout=2.0)
 
     def detach(self, peer: str) -> None:
-        """Drop the link to `peer` (its reader exits on the closed fd)
-        without surfacing a `__closed__` event — the caller already
-        knows; used before a deliberate reconnect."""
+        """Drop the link to `peer` and JOIN its reader thread (it exits
+        on the closed fd) without surfacing a `__closed__` event — the
+        caller already knows; used before a deliberate reconnect."""
         sock = self._conns.pop(peer, None)
         if sock is not None:
             _close_sock(sock)
+        t = self._readers.pop(peer, None)
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout=2.0)
 
     def peers(self):
         return list(self._conns)
@@ -365,7 +372,11 @@ class SocketTransport(Transport):
 
         def beat() -> None:
             while not self._closing and dst in self._conns:
-                _time.sleep(interval_s)
+                # Event.wait, not sleep: close() wakes the beat loop
+                # immediately so teardown can JOIN it instead of leaking
+                # a sleeping thread per peer
+                if self._stop_evt.wait(interval_s):
+                    return
                 if self._closing or dst not in self._conns:
                     return
                 try:
@@ -387,6 +398,16 @@ class SocketTransport(Transport):
         with self._send_locks[dst]:
             sock.sendall(frame)
 
+    def _ship(self, dst: str, frame: bytes, reliable: bool = True) -> None:
+        """THE egress seam: every encoded frame leaves through here,
+        AFTER metering.  The base transport writes straight to the
+        socket; `runtime.chaos.FaultyTransport` overrides this with an
+        enveloped, shaped, fault-injected reliable link — which is why
+        retransmits and duplicates can never touch the meters.
+        `reliable=False` marks traffic (heartbeats) that may be lost
+        without recovery."""
+        self._send_frame(dst, frame)
+
     def post(self, m: Message) -> None:
         if m.dst == self.name:              # local handoff, never metered
             self.inbound.put(m)
@@ -398,16 +419,19 @@ class SocketTransport(Transport):
             self.measured.add(m.src, m.dst, m.tag, len(frame) - overhead)
             self.overhead_bytes += overhead
             self.frames_sent += 1
-        self._send_frame(m.dst, frame)
+        self._ship(m.dst, frame, reliable=True)
 
     def send_control(self, m: Message) -> None:
-        """Ship a control frame without touching the protocol meters."""
+        """Ship a control frame without touching the protocol meters.
+        Heartbeats are marked unreliable: a chaos link may drop them
+        freely without burning retransmission budget on keep-alives."""
         if m.dst == self.name:
             self.inbound.put(m)
             return
         frame = self.codec.encode(m)
         self.overhead_bytes += len(frame)
-        self._send_frame(m.dst, frame)
+        self._ship(m.dst, frame,
+                   reliable=getattr(m, "kind", None) != "hb")
 
     # -- receiving ----------------------------------------------------------
     def _reader(self, peer: str, sock) -> None:
@@ -424,17 +448,43 @@ class SocketTransport(Transport):
                     peer, self.name, kind="__closed__",
                     payload={"error": f"{type(e).__name__}: {e}"}))
 
+    # -- bootstrap ----------------------------------------------------------
+    def recv_bootstrap(self, conn):
+        """Read one message from a connection that is not yet attached
+        (the handshake/hello reads in `netparty` happen before the peer
+        is known).  The chaos transport overrides this to peel its link
+        envelope; the two MUST agree, so parties read bootstrap frames
+        through their transport, never via raw `recv_frame`."""
+        return recv_frame(conn, self.codec)
+
     # -- lifecycle ----------------------------------------------------------
     def pump(self, order=None) -> None:
         raise NotImplementedError(
             "SocketTransport is event-driven; the hosting PartyServer/"
             "conductor drains .inbound instead of pump sweeps")
 
+    def flush(self, timeout: float = 5.0) -> bool:
+        """Wait until every shipped frame has actually left this host.
+        Synchronous sends have nothing to wait for; the chaos transport
+        overrides this to drain its shaped egress pipe.  Call before
+        `close` when the last frames (bye, error) must arrive."""
+        return True
+
     def close(self) -> None:
         self._closing = True
+        self._stop_evt.set()
         for sock in self._conns.values():
             _close_sock(sock)
         self._conns.clear()
+        # no leaked threads: reader threads exit on their closed fds,
+        # beat loops on the stop event — join them all (skipping the
+        # calling thread, should close ever run on one of them)
+        me = threading.current_thread()
+        for t in list(self._readers.values()) + self._hb_threads:
+            if t is not me and t.is_alive():
+                t.join(timeout=2.0)
+        self._readers.clear()
+        self._hb_threads.clear()
 
 
 def _close_sock(sock) -> None:

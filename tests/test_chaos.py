@@ -1,0 +1,404 @@
+"""Chaos link layer (runtime/chaos.py) + retry policy (runtime/policy.py).
+
+Four layers of coverage:
+
+1. the seeded fault schedule — every decision is a pure hash of
+   (seed, link, seq, attempt, channel), so schedules replay exactly
+   (property-tested via _hypothesis_compat) and the backoff trace of a
+   chaos run is itself deterministic;
+2. the link envelope + ARQ machinery — corrupt/truncated envelopes are
+   rejected (never silently delivered), duplicates and reorders are
+   never double-applied (exactly-once in-order delivery), retry-budget
+   exhaustion surfaces as a peer loss, and the pump/reader threads are
+   joined on close (no leaks);
+3. lossless wire compression — frame round-trip, the deterministic
+   worth-it probe, and config-time REFUSAL of the lossy int8 scheme
+   on the wire;
+4. the chaos gauntlet — k ∈ {2,3,4} × logistic/poisson socket training
+   under seeded drops/dups/reorders/resets + a guaranteed partition
+   (and, separately, a real SIGKILL mid-run) finishing bit-identical
+   to the fault-free run: losses, weights, per-tag analytic AND
+   measured bytes.
+"""
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.core import trainer  # noqa: E402
+from repro.core.trainer import PartyData, VFLConfig  # noqa: E402
+from repro.data import synthetic, vertical  # noqa: E402
+from repro.distributed import compression as comp_lib  # noqa: E402
+from repro.runtime import LocalTransport  # noqa: E402
+from repro.runtime import session  # noqa: E402
+from repro.runtime.chaos import (CH_DATA, ENVELOPE, MAGIC,  # noqa: E402
+                                 ChaosProfile, FaultSchedule,
+                                 FaultyTransport, LinkError, PROFILES,
+                                 link_seed, read_envelope, resolve_profile)
+from repro.runtime.codec import Codec  # noqa: E402
+from repro.runtime.policy import RetryPolicy, _unit_hash  # noqa: E402
+from repro.runtime.transport import PeerClosed  # noqa: E402
+
+#: the gauntlet profile: every fault kind enabled, partition GUARANTEED
+#: (p=1 → every directed link blackholes once), timings scaled for CI
+GAUNTLET = ChaosProfile(seed=42, latency_s=0.001, jitter_s=0.0005,
+                        drop_p=0.06, dup_p=0.04, reorder_p=0.08,
+                        reset_p=0.01, partition_p=1.0, partition_at=3,
+                        partition_s=0.15)
+
+
+def _make_parties(X, k):
+    parts = vertical.split_columns(X, k)
+    names = ["C"] + [f"B{i}" for i in range(1, k)]
+    return [PartyData(name=nm, X=p) for nm, p in zip(names, parts)]
+
+
+def _data(glm, n=160, seed=3):
+    if glm == "poisson":
+        return synthetic.dvisits(n=n, seed=seed)
+    return synthetic.credit_default(n=n, d=8, seed=seed)
+
+
+def _assert_socket_exact(res, ref):
+    assert res.losses == ref.losses
+    for name in ref.weights:
+        np.testing.assert_array_equal(res.weights[name], ref.weights[name])
+    assert dict(res.meter.by_tag) == dict(ref.meter.by_tag)
+    assert dict(res.measured_meter.by_tag) == dict(ref.meter.by_tag)
+    assert res.n_iter == ref.n_iter
+
+
+# ---------------------------------------------------------------------------
+# 1. seeded schedule + policy determinism
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31),   # profile seed
+       st.integers(min_value=0, max_value=10_000),    # seq
+       st.integers(min_value=0, max_value=30))        # attempt
+def test_fault_schedule_replays_exactly(seed, seq, attempt):
+    """Two schedules built from equal profiles agree on every decision;
+    the decisions depend only on their integer inputs."""
+    p = ChaosProfile(seed=seed, drop_p=0.3, dup_p=0.3, reorder_p=0.3,
+                     reset_p=0.3, jitter_s=0.004,
+                     partition_p=0.5, partition_s=0.1)
+    a, b = FaultSchedule(p), FaultSchedule(ChaosProfile(**p.to_dict()))
+    ls = link_seed(seed, "C", "B1")
+    for chan in range(3):
+        assert a.drop(ls, seq, attempt, chan) == b.drop(ls, seq, attempt,
+                                                        chan)
+        assert a.reorder(ls, seq, attempt, chan) == b.reorder(
+            ls, seq, attempt, chan)
+        assert a.jitter(ls, seq, attempt, chan) == b.jitter(
+            ls, seq, attempt, chan)
+        assert 0.0 <= a.jitter(ls, seq, attempt, chan) <= p.jitter_s
+    assert a.dup(ls, seq) == b.dup(ls, seq)
+    assert a.reset(ls, seq, attempt) == b.reset(ls, seq, attempt)
+    assert a.partition_point(ls) == b.partition_point(ls)
+
+
+def test_link_seed_is_directed_and_keyed():
+    """A→B and B→A are independent links; the profile seed matters."""
+    assert link_seed(0, "C", "B1") != link_seed(0, "B1", "C")
+    assert link_seed(0, "C", "B1") != link_seed(1, "C", "B1")
+    assert link_seed(7, "C", "B1") == link_seed(7, "C", "B1")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31),
+       st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=30))
+def test_backoff_deterministic_and_bounded(ls, seq, attempt):
+    pol = RetryPolicy()
+    d = pol.backoff(ls, seq, attempt)
+    assert d == pol.backoff(ls, seq, attempt)            # replayable
+    assert 0.5 * pol.rto(attempt) <= d < 1.5 * pol.rto(attempt)
+    assert pol.rto(attempt) <= pol.rto_max_s
+
+
+def test_policy_roundtrip_and_derived():
+    pol = RetryPolicy(io_timeout_s=42.0, rto_initial_s=0.125,
+                      retry_budget=5, frame_deadlines=(("bye", 3.0),))
+    back = RetryPolicy.from_dict(pol.to_dict())
+    assert back == pol
+    assert back.deadline_for("bye") == 3.0
+    assert back.deadline_for("iterate") == 42.0
+    assert back.connect_timeout() == 42.0
+    assert back.heartbeat_interval() == 14.0             # io/3 < 30
+    # budget × capped backoff bounds the survivable outage — the chaos
+    # profiles' partitions must sit well under the default bound
+    assert RetryPolicy().max_outage_s() > 10 * PROFILES[
+        "chaos"].partition_s
+    assert 0.0 <= _unit_hash(1, 2, 3) < 1.0
+
+
+def test_resolve_profile_forms():
+    assert resolve_profile(None) is None
+    assert resolve_profile("wan20") is PROFILES["wan20"]
+    p = resolve_profile({"seed": 3, "drop_p": 0.5})
+    assert p.seed == 3 and p.drop_p == 0.5 and p.faulty()
+    assert resolve_profile(p) is p
+    with pytest.raises(ValueError, match="unknown chaos profile"):
+        resolve_profile("tsunami")
+    assert not PROFILES["off"].active()
+    assert PROFILES["wan20"].shaped() and not PROFILES["wan20"].faulty()
+
+
+# ---------------------------------------------------------------------------
+# 2. envelope + ARQ machinery
+# ---------------------------------------------------------------------------
+
+def _sock_pair():
+    import socket as socket_lib
+    srv = socket_lib.create_server(("127.0.0.1", 0))
+    cli = socket_lib.create_connection(srv.getsockname())
+    conn, _ = srv.accept()
+    srv.close()
+    return cli, conn
+
+
+def test_read_envelope_rejects_corruption():
+    """Bad magic, crc mismatch, oversize, truncation: all raise, none
+    silently deliver."""
+    import zlib
+    tx, rx = _sock_pair()
+    try:
+        body = b"payload-bytes"
+        tx.sendall(ENVELOPE.pack(MAGIC, 1, 7, zlib.crc32(body), len(body))
+                   + body)
+        assert read_envelope(rx) == (1, 7, body)
+        tx.sendall(ENVELOPE.pack(b"NOPE", 1, 0, 0, 0))
+        with pytest.raises(LinkError, match="magic"):
+            read_envelope(rx)
+        tx.sendall(ENVELOPE.pack(MAGIC, 1, 1, zlib.crc32(body) ^ 0xFF,
+                                 len(body)) + body)
+        with pytest.raises(LinkError, match="crc"):
+            read_envelope(rx)
+        tx.sendall(ENVELOPE.pack(MAGIC, 1, 2, 0, 1 << 31))
+        with pytest.raises(LinkError, match="too large"):
+            read_envelope(rx)
+        tx.sendall(ENVELOPE.pack(MAGIC, 1, 3, 0, 64)[:10])
+        tx.close()                                   # truncated header
+        with pytest.raises(PeerClosed):
+            read_envelope(rx)
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_rx_ingest_exactly_once_in_order():
+    """Duplicates discarded, early arrivals buffered, delivery strictly
+    in seq order — no frame is ever applied twice."""
+    tp = FaultyTransport("X", Codec())
+    try:
+        assert tp._rx_ingest("P", 0, "m0") == ["m0"]
+        assert tp._rx_ingest("P", 0, "m0") == []     # dup of delivered
+        assert tp._rx_ingest("P", 3, "m3") == []     # early — buffered
+        assert tp._rx_ingest("P", 3, "m3") == []     # dup of buffered
+        assert tp._rx_ingest("P", 2, "m2") == []
+        assert tp._rx_ingest("P", 1, "m1") == ["m1", "m2", "m3"]
+        assert tp._rx_ingest("P", 2, "m2") == []     # late dup
+        st = tp.chaos_stats
+        assert st.rx_dups == 3 and st.rx_buffered == 2
+    finally:
+        tp.close()
+
+
+def test_faulty_pair_delivers_under_faults():
+    """Two FaultyTransports over real sockets under a drop/dup/reorder
+    profile: every control arrives exactly once, in order."""
+    from repro.runtime import messages as msg_lib
+    prof = ChaosProfile(seed=5, latency_s=0.001, drop_p=0.15, dup_p=0.1,
+                        reorder_p=0.2)
+    pol = RetryPolicy(rto_initial_s=0.05, rto_max_s=0.2)
+    a = FaultyTransport("A", Codec(), profile=prof, policy=pol)
+    b = FaultyTransport("B", Codec(), profile=prof, policy=pol)
+    s_ab, s_ba = _sock_pair()
+    a.attach("B", s_ab)
+    b.attach("A", s_ba)
+    try:
+        n = 30
+        for i in range(n):
+            a.send_control(msg_lib.Control("A", "B", kind=f"seq{i}"))
+        got = [b.inbound.get(timeout=30) for _ in range(n)]
+        assert [m.kind for m in got] == [f"seq{i}" for i in range(n)]
+        assert a.flush(timeout=30)                   # all acked
+        total = a.chaos_stats.injected() + b.chaos_stats.injected()
+        assert total > 0, "profile injected nothing — test is vacuous"
+    finally:
+        a.close()
+        b.close()
+
+
+def test_retry_budget_exhaustion_surfaces_peer_loss():
+    """drop_p=1 blackhole + tiny budget: the sender declares the link
+    dead with a __closed__ event instead of retrying forever."""
+    from repro.runtime import messages as msg_lib
+    prof = ChaosProfile(seed=1, drop_p=1.0)
+    pol = RetryPolicy(rto_initial_s=0.01, rto_max_s=0.02, retry_budget=3)
+    a = FaultyTransport("A", Codec(), profile=prof, policy=pol)
+    b = FaultyTransport("B", Codec(), profile=prof, policy=pol)
+    s_ab, s_ba = _sock_pair()
+    a.attach("B", s_ab)
+    b.attach("A", s_ba)
+    try:
+        a.send_control(msg_lib.Control("A", "B", kind="doomed"))
+        m = a.inbound.get(timeout=10)
+        assert m.kind == "__closed__"
+        assert "retry budget" in m.payload["error"]
+        assert a.chaos_stats.budget_deaths == 1
+        assert a.chaos_stats.retransmits == pol.retry_budget
+    finally:
+        a.close()
+        b.close()
+
+
+def test_chaos_threads_joined_on_close():
+    """detach + close leave no pump/reader/heartbeat threads behind."""
+    from repro.runtime import messages as msg_lib
+    before = {t.name for t in threading.enumerate()}
+    a = FaultyTransport("A", Codec(), profile=PROFILES["lossy"])
+    b = FaultyTransport("B", Codec(), profile=PROFILES["lossy"])
+    s_ab, s_ba = _sock_pair()
+    a.attach("B", s_ab)
+    b.attach("A", s_ba)
+    a.start_heartbeat("B", 0.02)
+    a.send_control(msg_lib.Control("A", "B", kind="ping"))
+    assert b.inbound.get(timeout=10).kind == "ping"
+    b.detach("A")
+    a.close()
+    b.close()
+    leaked = {t.name for t in threading.enumerate()} - before
+    assert not leaked, f"threads leaked past close: {leaked}"
+
+
+# ---------------------------------------------------------------------------
+# 3. lossless wire compression
+# ---------------------------------------------------------------------------
+
+def test_wire_scheme_validation_refuses_lossy():
+    assert comp_lib.validate_wire_scheme("none") == "none"
+    assert comp_lib.validate_wire_scheme("zlib") == "zlib"
+    with pytest.raises(ValueError, match="(?i)lossy"):
+        comp_lib.validate_wire_scheme("int8")
+    with pytest.raises(ValueError):
+        comp_lib.validate_wire_scheme("brotli")
+
+
+def test_deflate_roundtrip_and_probe():
+    compressible = b"\x00" * 4096 + b"abc" * 1000
+    assert comp_lib.worth_deflating(compressible)
+    wire = comp_lib.deflate_frame(compressible)
+    assert len(wire) < len(compressible)
+    assert comp_lib.inflate_frame(wire) == compressible
+    assert not comp_lib.worth_deflating(b"x")            # tiny: skipped
+    rnd = np.random.default_rng(0).bytes(8192)           # dense: probe
+    assert not comp_lib.worth_deflating(rnd)             # says no
+
+
+def test_wire_compression_is_non_semantic_for_resume():
+    cfg_a = VFLConfig(glm="logistic", seed=1)
+    cfg_b = VFLConfig(glm="logistic", seed=1, wire_compression="zlib")
+    assert session.config_hash(cfg_a) == session.config_hash(cfg_b)
+
+
+def test_compressed_socket_run_bit_identical():
+    """wire_compression=zlib below the metering boundary: identical
+    losses/weights/meters, and the stats show frames were deflated."""
+    from repro.launch.cluster import train_vfl_socket
+    X, y = _data("logistic")
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=2, batch_size=64,
+                    he_backend="mock", tol=0.0, seed=11,
+                    wire_compression="zlib")
+    parties = _make_parties(X, 3)
+    ref = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    res = train_vfl_socket(parties, y, cfg)
+    _assert_socket_exact(res, ref)
+    total = res.chaos_report["total"]
+    assert total["deflated_frames"] > 0
+    assert total["deflate_saved_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# 4. the gauntlet: chaos training bit-identical to fault-free
+# ---------------------------------------------------------------------------
+
+def _gauntlet(glm, k, tmp_path=None, kill_plan=None):
+    from repro.launch.cluster import (train_vfl_socket,
+                                      train_vfl_socket_resilient)
+    X, y = _data(glm)
+    cfg = VFLConfig(glm=glm, lr=0.1, max_iter=3, batch_size=48,
+                    he_backend="mock", tol=0.0, seed=11,
+                    checkpoint_every=1 if kill_plan else 0)
+    parties = _make_parties(X, k)
+    ref = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    if kill_plan:
+        res = train_vfl_socket_resilient(
+            parties, y, cfg, checkpoint_dir=str(tmp_path),
+            kill_plan=kill_plan, chaos=GAUNTLET)
+    else:
+        res = train_vfl_socket(parties, y, cfg, chaos=GAUNTLET)
+    _assert_socket_exact(res, ref)
+    total = res.chaos_report["total"]
+    assert total["drops"] > 0 and total["retransmits"] > 0
+    assert total["partitions"] >= 1                      # p=1 guarantees
+    return res, total
+
+
+@pytest.mark.parametrize("glm,k", [("logistic", 2), ("logistic", 3),
+                                   ("poisson", 3)])
+def test_chaos_gauntlet_bit_identical(glm, k):
+    """Seeded drops/dups/reorders/resets + a guaranteed partition on
+    every link: training finishes bit-identical to the fault-free run
+    (losses, weights, per-tag analytic AND measured bytes)."""
+    res, total = _gauntlet(glm, k)
+    assert total["dups"] > 0 or total["reorders"] > 0
+    assert total["budget_deaths"] == 0                   # ARQ absorbed all
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("glm,k", [("logistic", 4), ("poisson", 2),
+                                   ("poisson", 4)])
+def test_chaos_gauntlet_bit_identical_slow(glm, k):
+    _gauntlet(glm, k)
+
+
+def test_chaos_gauntlet_with_sigkill(tmp_path):
+    """The full storm: faults + partition + a real SIGKILL of B1 — the
+    supervisor resumes from party-local checkpoints and the finished
+    run is still bit-identical."""
+    res, total = _gauntlet("logistic", 3, tmp_path=tmp_path,
+                           kill_plan={2: "B1"})
+    assert res.restarts == 1
+    assert res.resume_report["step"] >= 1
+
+
+def test_flapping_party_quarantined_and_standby_admitted(tmp_path):
+    """Elastic epochs: B1 is SIGKILLed twice (flap_threshold) — the
+    supervisor quarantines it, admits the standby replica of the same
+    role at the restart boundary, records the checkpoint handoff plan,
+    and the finished run is STILL bit-identical (the replica holds the
+    same feature shard)."""
+    from repro.launch.cluster import train_vfl_socket_resilient
+    X, y = _data("logistic")
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=4, batch_size=48,
+                    he_backend="mock", tol=0.0, seed=11,
+                    checkpoint_every=1)
+    parties = _make_parties(X, 3)
+    replica = PartyData("B1", np.array(parties[1].X, copy=True))
+    ref = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    res = train_vfl_socket_resilient(
+        parties, y, cfg, checkpoint_dir=str(tmp_path),
+        kill_plan={1: "B1", 2: "B1"}, standby={"B1": replica},
+        flap_threshold=2)
+    _assert_socket_exact(res, ref)
+    assert res.restarts == 2
+    assert res.failures == {"B1": 2}
+    plan = res.quarantined["B1"]
+    assert plan["party"] == "B1" and plan["step"] >= 1
+    assert plan["files"] and all("sha256" in f for f in plan["files"])

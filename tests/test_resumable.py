@@ -372,6 +372,32 @@ def test_completed_run_resume_is_noop(tmp_path):
     _assert_socket_exact(again, first)
 
 
+def test_resume_handshake_survives_partition(tmp_path):
+    """A link partition firing during the resume handshake itself: the
+    chaos ARQ layer (runtime/chaos.py) retransmits the handshake frames
+    across the outage, the max-common-step election completes, and the
+    resumed run stays bit-identical — regression for the resume frames
+    being single-shot reads with no retry path."""
+    from repro.launch.cluster import train_vfl_socket
+    from repro.runtime.chaos import ChaosProfile
+    X, y = _data("logistic", n=120, seed=3)
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=2, batch_size=32,
+                    he_backend="mock", tol=0.0, seed=11,
+                    checkpoint_every=1)
+    parties = _make_parties(X, 2)
+    first = train_vfl_socket(parties, y, cfg, checkpoint_dir=str(tmp_path))
+    # partition_p=1 + partition_at=2: every directed link blackholes at
+    # its 2nd reliable first-send — i.e. mid-handshake, before iterate
+    storm = ChaosProfile(seed=9, latency_s=0.001, drop_p=0.05,
+                         partition_p=1.0, partition_at=2,
+                         partition_s=0.2)
+    again = train_vfl_socket(parties, y, cfg, checkpoint_dir=str(tmp_path),
+                             resume=True, chaos=storm)
+    assert again.resume_report["step"] == 2
+    _assert_socket_exact(again, first)
+    assert again.chaos_report["total"]["partitions"] >= 1
+
+
 # ---------------------------------------------------------------------------
 # transport-level liveness plumbing
 # ---------------------------------------------------------------------------
