@@ -22,6 +22,7 @@ BENCH_CRYPTO_PATH = REPO_ROOT / "BENCH_crypto.json"
 BENCH_WIRE_PATH = REPO_ROOT / "BENCH_wire.json"
 BENCH_CHECKPOINT_PATH = REPO_ROOT / "BENCH_checkpoint.json"
 BENCH_WAN_PATH = REPO_ROOT / "BENCH_wan.json"
+BENCH_SERVE_PATH = REPO_ROOT / "BENCH_serve.json"
 
 
 def _csv(name: str, us: float, derived: str = "") -> None:
@@ -86,10 +87,11 @@ def bench_fig2(paper: bool) -> None:
 
 
 def check_committed_guards() -> None:
-    """Re-validate the guard rows of the committed BENCH_crypto.json
-    (structure + ratios), without re-measuring.  Exits non-zero on any
-    violation so CI fails if a regressing measurement is committed."""
-    from benchmarks import kernel_bench
+    """Re-validate the guard rows of the committed BENCH_crypto.json and
+    BENCH_serve.json (structure + ratios), without re-measuring.  Exits
+    non-zero on any violation so CI fails if a regressing measurement is
+    committed."""
+    from benchmarks import kernel_bench, serve_bench
     report = json.loads(BENCH_CRYPTO_PATH.read_text())
     rows = report["kernels"]
     guarded = [r["name"] for r in rows if r.get("guard_vs")]
@@ -103,6 +105,20 @@ def check_committed_guards() -> None:
                          + "\n  ".join(failures))
     print(f"# {BENCH_CRYPTO_PATH.name}: {len(guarded)} guard rows ok "
           f"({', '.join(guarded)})")
+    serve_report = json.loads(BENCH_SERVE_PATH.read_text())
+    srows = serve_report["rows"]
+    sguarded = [r["name"] for r in srows
+                if r.get("guard_vs") or "wire_ok" in r]
+    if not sguarded:
+        raise SystemExit(f"{BENCH_SERVE_PATH.name}: no guard rows found "
+                         "— regenerate with python -m benchmarks.run "
+                         "--only serve")
+    failures = serve_bench.check_guards(srows)
+    if failures:
+        raise SystemExit(f"{BENCH_SERVE_PATH.name} guard violations:\n  "
+                         + "\n  ".join(failures))
+    print(f"# {BENCH_SERVE_PATH.name}: {len(sguarded)} guard rows ok "
+          f"({', '.join(sguarded)})")
 
 
 def bench_kernels(_: bool, smoke: bool = False) -> None:
@@ -196,6 +212,33 @@ def bench_wan(_: bool, smoke: bool = False) -> None:
     print(f"# wrote {wan_bench.write_report(report)}")
 
 
+def bench_serve(_: bool, smoke: bool = False) -> None:
+    """Secure scoring service: p50/p99 latency + throughput vs batch
+    size x k x crypto backend; full mode writes BENCH_serve.json."""
+    import jax
+
+    from benchmarks import serve_bench
+    rows = serve_bench.run(smoke=smoke)
+    for r in rows:
+        _csv(r["name"], r["us"], r["derived"])
+    failures = serve_bench.check_guards(rows)
+    if failures:
+        # SystemExit so the CI smoke gate goes red (see bench_kernels)
+        raise SystemExit("serve guard violations:\n  "
+                         + "\n  ".join(failures))
+    if smoke:
+        print(f"# smoke mode: {BENCH_SERVE_PATH.name} not written")
+        return
+    report = {
+        "schema": "bench_serve/v1",
+        "jax": jax.__version__,
+        "rows": [{k: v for k, v in r.items() if k not in ("us", "derived")}
+                 for r in rows],
+    }
+    BENCH_SERVE_PATH.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"# wrote {BENCH_SERVE_PATH}")
+
+
 def bench_roofline(_: bool) -> None:
     from benchmarks import roofline
     rows = roofline.run()
@@ -223,6 +266,7 @@ BENCHES = {
     "wire": bench_wire,
     "checkpoint": bench_checkpoint,
     "wan": bench_wan,
+    "serve": bench_serve,
     "roofline": bench_roofline,
 }
 
@@ -246,7 +290,7 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         try:
-            if name in ("kernels", "wire", "checkpoint", "wan"):
+            if name in ("kernels", "wire", "checkpoint", "wan", "serve"):
                 fn(args.paper, smoke=args.smoke)
             else:
                 fn(args.paper)

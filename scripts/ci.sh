@@ -55,4 +55,13 @@ python examples/resumable_training.py --smoke >/dev/null
 # + SIGKILL, bit-identical) is tests/test_chaos.py in the sweep below.
 python -m benchmarks.run --only wan --smoke >/dev/null
 
+# Serving smoke: the continuous-batching scoring service must run
+# end-to-end (admission -> version-pinned caches -> infer.wx_share ->
+# inverse link) AND its guard rows must hold — batching must amortize
+# (largest-batch throughput >= singleton).  The committed BENCH_serve
+# .json is re-validated by the --guards gate above; the full parity
+# gauntlet (bit-identity, chaos, hot swap) is tests/test_serve_* in
+# the tier-1 sweep below.
+python -m benchmarks.run --only serve --smoke >/dev/null
+
 exec python -m pytest -x -q "$@"

@@ -1,7 +1,18 @@
 """Fault-tolerant checkpointing."""
+import os
+
 from repro.checkpoint.manager import (CheckpointManager, CheckpointMismatch,
                                       load_checkpoint, save_checkpoint,
                                       valid_steps)
 
+
+def party_checkpoint_dir(root: str, name: str) -> str:
+    """Canonical location of one party's TrainState-slice checkpoints
+    under a run's checkpoint root.  One definition, three consumers:
+    the party server writes here, the supervisor's handoff plan reads
+    here, and the serving engine's hot model swap loads here."""
+    return os.path.join(root, f"party_{name}")
+
+
 __all__ = ["CheckpointManager", "CheckpointMismatch", "load_checkpoint",
-           "save_checkpoint", "valid_steps"]
+           "save_checkpoint", "valid_steps", "party_checkpoint_dir"]

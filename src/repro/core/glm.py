@@ -145,6 +145,29 @@ def sigmoid(x):
     return 1.0 / (1.0 + np.exp(-x))
 
 
+def matvec_rowwise(X: np.ndarray, W: np.ndarray) -> np.ndarray:
+    """X @ W with a FIXED summation order: accumulate column-by-column
+    with element-wise multiply-adds, never a BLAS reduction.
+
+    BLAS gemv picks its reduction kernel (and therefore its float64
+    association) from the matrix shape and buffer alignment, so the
+    same row dotted inside a (7, m) micro-batch, a (96, m) one-shot
+    matrix, or as a lone row view can differ in the last ulp.  Scoring
+    must be batch-size-invariant — a served prediction is compared
+    bit-for-bit against the one-shot scorer — so every wx path
+    (serving `predict_share`, one-shot `TrainResult.predict_wx`) funnels
+    through this kernel: out[i] depends only on row i with one fixed op
+    order, which IEEE-754 makes reproducible.  m is the per-party
+    feature count (small); the O(n·m) elementwise cost matches gemv's.
+    """
+    X = np.asarray(X, np.float64)
+    W = np.asarray(W, np.float64)
+    out = np.zeros(X.shape[0], np.float64)
+    for j in range(X.shape[1]):
+        out += X[:, j] * W[j]
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class GLM:
     name: str

@@ -73,7 +73,10 @@ class TrainResult:
     rounds: int = 0                   # communication rounds (transport count)
 
     def predict_wx(self, parties: Sequence[PartyData]) -> np.ndarray:
-        return sum(p.X @ self.weights[p.name] for p in parties)
+        # matvec_rowwise (not @): the one-shot scorer must agree
+        # bit-for-bit with the micro-batched serving path
+        return sum(glm_lib.matvec_rowwise(p.X, self.weights[p.name])
+                   for p in parties)
 
 
 def make_backend(cfg: VFLConfig, party_names: Sequence[str],

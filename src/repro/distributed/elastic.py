@@ -75,7 +75,8 @@ def party_handoff_plan(checkpoint_root: str, name: str,
     an empty plan (step 0, no files) means the replacement starts the
     roll-back-and-replay from scratch.
     """
-    directory = os.path.join(checkpoint_root, f"party_{name}")
+    from repro.checkpoint import party_checkpoint_dir
+    directory = party_checkpoint_dir(checkpoint_root, name)
     chosen, files = 0, []
     if os.path.isdir(directory):
         steps = sorted({int(f.split("_")[1].split(".")[0])

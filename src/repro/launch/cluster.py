@@ -69,8 +69,10 @@ class FatalClusterError(ClusterError):
 
 
 #: remote exception types a restart can never fix — the party reports
-#: the type name in its `error` frame (`netparty.PartyServer.run`)
-NON_RETRYABLE_ERRORS = frozenset({"CheckpointMismatch"})
+#: the type name in its `error` frame (`netparty.PartyServer.run`).
+#: `StaleCacheError` is the serving-path analogue of a checkpoint
+#: mismatch: a version/key-fingerprint refusal replays identically.
+NON_RETRYABLE_ERRORS = frozenset({"CheckpointMismatch", "StaleCacheError"})
 
 
 class SocketCluster:
@@ -468,11 +470,65 @@ class SocketCluster:
         return res
 
     # -- serving ------------------------------------------------------------
-    def score(self, features: dict[str, np.ndarray]) -> np.ndarray:
+    def publish_model(self, version: int = 0) -> dict[str, str]:
+        """Pin every party's CURRENT weights as served model `version`
+        (each party builds its per-version serving cache — windowed
+        digits + encrypted constant, repro/serve/cache.py).  Returns
+        {party: key fingerprint} from the acks."""
+        assert self._started, "call start() first"
+        for name in self.names:
+            self.tp.send_control(msg.Control(
+                CONDUCTOR, name, kind="publish",
+                payload={"version": int(version)}))
+        acks = self._collect("publish_ok")
+        return {n: a.payload.get("key_fp") for n, a in acks.items()}
+
+    def swap_model(self, step: int, version: int) -> dict[str, dict]:
+        """Hot-model-swap barrier: every party loads its OWN TrainState
+        slice from checkpoint `step` and republishes it as `version`;
+        returns the per-party acks once ALL parties have swapped.  The
+        caller must guarantee no scoring batch is in flight
+        (`VFLScoringEngine` drains before issuing the swap)."""
+        assert self._started, "call start() first"
+        for name in self.names:
+            self.tp.send_control(msg.Control(
+                CONDUCTOR, name, kind="swap",
+                payload={"step": int(step), "version": int(version)}))
+        acks = self._collect("swap_ok")
+        return {n: dict(a.payload) for n, a in acks.items()}
+
+    def fetch_meters(self) -> dict:
+        """Out-of-protocol meter snapshot from every party (re-runs the
+        `fetch` collection): cumulative analytic + measured per-tag
+        `CommMeter`s summed across parties, plus frame overhead.  Lets
+        the serving gauntlet assert measured == analytic for
+        `infer.wx_share` after scoring traffic, the same invariant
+        training asserts per tag."""
+        assert self._started, "call start() first"
+        for name in self.names:
+            self.tp.send_control(msg.Control(CONDUCTOR, name, kind="fetch"))
+        results = self._collect("result")
+        meter, measured = CommMeter(), CommMeter()
+        overhead = 0
+        for r in results.values():
+            for src, dst, tag, nbytes in r.payload["sends"]:
+                meter.add(src, dst, tag, nbytes)
+            for src, dst, tag, nbytes in r.payload["measured"]:
+                measured.add(src, dst, tag, nbytes)
+            overhead += int(r.payload["overhead_bytes"])
+        return {"meter": meter, "measured": measured,
+                "overhead_bytes": overhead}
+
+    def score(self, features: dict[str, np.ndarray],
+              version: int | None = None) -> np.ndarray:
         """Score a batch of vertically-split rows over the socket path.
 
         Args:
           features: party name -> (n_rows, m_p) feature block.
+          version: published model version to score at (None = the live
+            weights, unversioned legacy path).  A party whose serving
+            cache disagrees refuses — `StaleCacheError`, surfaced as a
+            non-retryable `FatalClusterError`.
         Returns:
           (n_rows,) predictions (inverse link applied at C).
         """
@@ -484,7 +540,9 @@ class SocketCluster:
                 rows = rows[None, :]
             self.tp.send_control(msg.Control(
                 CONDUCTOR, name, kind="score",
-                payload={"rid": rid, "rows": rows.tolist()}))
+                payload={"rid": rid, "rows": rows.tolist(),
+                         "version": None if version is None
+                         else int(version)}))
         while True:
             try:
                 m = self.tp.inbound.get(timeout=self.io_timeout)
@@ -500,7 +558,10 @@ class SocketCluster:
                     continue          # stale result of an abandoned request
                 return np.asarray(m.payload["preds"], np.float64)
             if m.kind == "error":
-                raise ClusterError(
+                cls = FatalClusterError \
+                    if m.payload.get("etype") in NON_RETRYABLE_ERRORS \
+                    else ClusterError
+                raise cls(
                     f"party {m.payload.get('party')} failed:\n"
                     f"{m.payload.get('traceback')}",
                     party=self._blame(m.payload))

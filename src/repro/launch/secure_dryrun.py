@@ -272,13 +272,12 @@ def measured_comm(transport: str, features: int, key_bits: int,
         out["frame_overhead_mb"] = res.wire_overhead_bytes / 1e6
         measured = dict(res.measured_meter.by_tag)
         if checkpointing:
-            from repro.checkpoint import valid_steps
+            from repro.checkpoint import party_checkpoint_dir, valid_steps
             from repro.runtime import session
             ck = {"dir": checkpoint_dir, "every": cfg.checkpoint_every,
                   "steps_on_disk": {
                       p.name: valid_steps(
-                          os.path.join(checkpoint_dir,
-                                       f"party_{p.name}"),
+                          party_checkpoint_dir(checkpoint_dir, p.name),
                           expect_config_hash=session.config_hash(cfg),
                           expect_codec_version=session.CODEC_VERSION)
                       for p in parties}}
@@ -322,6 +321,52 @@ def measured_comm(transport: str, features: int, key_bits: int,
                               if out["matches_analytic"] else "DIVERGED"),
         }
     return out
+
+
+def serving_report(k: int = 3, n_req: int = 48, batch: int = 8) -> dict:
+    """One in-process serving micro-run for the dry-run report: train a
+    tiny k-party GLM, serve `n_req` requests through the continuous-
+    batching scoring engine (`serve.VFLScoringEngine`, docs/serving.md)
+    and report p50/p99 latency, throughput, and the serving wire
+    identity — metered `infer.wx_share` bytes must equal the analytic
+    n_req·(k−1)·8 — plus a hot-swap drill verdict: served predictions
+    at the published version must be bit-identical to the one-shot
+    scorer."""
+    import numpy as np
+    from repro.core import glm as glm_lib
+    from repro.core.trainer import PartyData, VFLConfig
+    from repro.data import synthetic, vertical
+    from repro.runtime import VFLScheduler
+    from repro.serve import VFLScoringEngine
+
+    X, y = synthetic.credit_default(n=160, d=8, seed=23)
+    parts = vertical.split_columns(X, k)
+    names = ["C"] + [f"B{i}" for i in range(1, k)]
+    parties = [PartyData(nm, p) for nm, p in zip(names, parts)]
+    cfg = VFLConfig(glm="logistic", lr=0.1, max_iter=2, batch_size=128,
+                    he_backend="mock", tol=0.0, seed=23)
+    sched = VFLScheduler(parties, y, cfg)
+    res = sched.run()
+    eng = VFLScoringEngine(sched.parties, max_batch=batch)
+    for i in range(n_req):
+        eng.submit({nm: part[i % part.shape[0]]
+                    for nm, part in zip(names, parts)})
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    lat = eng.latencies()
+    got = np.array([r.prediction for r in done])
+    want = glm_lib.GLMS[cfg.glm].predict(res.predict_wx(parties))[:n_req]
+    wx_bytes = eng.transport.meter.by_tag["infer.wx_share"]
+    return {
+        "parties": k, "n_req": n_req, "max_batch": batch,
+        "model_version": eng.model_version,
+        "p50_ms": round(float(np.percentile(lat, 50) * 1e3), 4),
+        "p99_ms": round(float(np.percentile(lat, 99) * 1e3), 4),
+        "wx_share_bytes": int(wx_bytes),
+        "wx_share_bytes_analytic": n_req * (k - 1) * 8,
+        "wire_ok": int(wx_bytes) == n_req * (k - 1) * 8,
+        "serve_verdict": ("bit_identical"
+                          if np.array_equal(got, want) else "DIVERGED"),
+    }
 
 
 def tables_report(path: str, key_bits: int, engine_name: str,
@@ -423,6 +468,12 @@ def main() -> None:
                          "this runtime.chaos profile and report injected "
                          "faults, ARQ recovery work, and the chaos "
                          "verdict next to the measured comm table")
+    ap.add_argument("--serve", action="store_true",
+                    help="also run an in-process serving micro-report "
+                         "(continuous-batching scoring engine): p50/p99 "
+                         "latency, throughput, the infer.wx_share wire "
+                         "identity, and the served-vs-one-shot verdict "
+                         "(docs/serving.md)")
     ap.add_argument("--out", default="results/secure_dryrun.json")
     args = ap.parse_args()
 
@@ -542,6 +593,8 @@ def main() -> None:
             args.transport, m, args.key_bits,
             checkpoint_dir=args.checkpoint_dir,
             resume_drill=args.resume, chaos=args.chaos)
+    if args.serve:
+        res["serving"] = serving_report()
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1)

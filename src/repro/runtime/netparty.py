@@ -63,7 +63,6 @@ between iterations.
 """
 from __future__ import annotations
 
-import collections
 import os
 import socket
 import traceback
@@ -73,7 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointManager, party_checkpoint_dir
 from repro.core import glm as glm_lib
 from repro.core import protocols
 from repro.crypto import paillier, ring
@@ -84,6 +83,7 @@ from repro.runtime import codec as codec_lib
 from repro.runtime import messages as msg
 from repro.runtime import seeds as seeds_lib
 from repro.runtime import session as session_lib
+from repro.runtime.dispatch import DispatchCore, PeerLost
 from repro.runtime.party import DataParty, LabelParty
 from repro.runtime.policy import RetryPolicy
 from repro.runtime.scheduler import mask_bound_bits, validate_key_bits
@@ -91,16 +91,9 @@ from repro.runtime.transport import SocketTransport
 
 CONDUCTOR = "conductor"
 
-
-class PeerLost(RuntimeError):
-    """A transport link died mid-protocol.  `peer` names the far end so
-    the conductor can attribute the failure to the party that actually
-    vanished rather than to the collateral reporter — the supervisor's
-    flap-quarantine accounting keys on that attribution."""
-
-    def __init__(self, message: str, peer: str):
-        super().__init__(message)
-        self.peer = peer
+#: re-export for importers: the event-loop core (and its peer-loss
+#: exception) moved to runtime/dispatch.py so serving shares it
+PeerLost = PeerLost
 #: historical module constant, now derived from the central policy
 #: block (runtime/policy.py) — kept for importers
 IO_TIMEOUT_S = RetryPolicy.from_env().io_timeout_s
@@ -144,7 +137,7 @@ class PartyServer:
         # key material never leave the process (keys are seed-derived and
         # re-derived on resume — see docs/fault_tolerance.md)
         self.checkpoint_dir = None if checkpoint_dir is None else \
-            os.path.join(checkpoint_dir, f"party_{name}")
+            party_checkpoint_dir(checkpoint_dir, name)
         self.ckpt: Optional[CheckpointManager] = None
         self.resume = False
         self.backend = None
@@ -154,10 +147,13 @@ class PartyServer:
         self._flags_seen = 0
         self._unmask_served = 0
         self._dealer_draws = 0
-        self._pending_p1: collections.deque = collections.deque()
-        self._pending_wx: collections.deque = collections.deque()
-        self._opens: dict[str, collections.deque] = \
-            collections.defaultdict(collections.deque)
+        # selective-receive core + stashes are built in _run once the
+        # transport exists (runtime/dispatch.py); the match predicates
+        # close over the phase flags above
+        self.core: Optional[DispatchCore] = None
+        self._pending_p1 = None
+        self._pending_wx = None
+        self._opens = None
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -214,6 +210,17 @@ class PartyServer:
         self.port = self._listen.getsockname()[1]
         self.codec = codec_lib.Codec(self._resolve_mod)
         self.tp = self._make_transport()
+        # shared request-dispatch core: training and serving both run on
+        # it, so infer.wx_share frames cross the same codec/meter stack
+        # as training traffic (see runtime/dispatch.py)
+        self.core = DispatchCore(self.name, self.tp, self.io_timeout,
+                                 deliver=self._dispatch)
+        self._opens = self.core.add_stash(
+            lambda m: isinstance(m, msg.BeaverOpen), key=lambda m: m.src)
+        self._pending_p1 = self.core.add_stash(
+            lambda m: isinstance(m, _P1_TYPES) and not self._p1_open)
+        self._pending_wx = self.core.add_stash(
+            lambda m: isinstance(m, msg.WxShare) and not self._scoring)
         if ready_queue is not None:
             ready_queue.put((self.name, self.port))
 
@@ -325,43 +332,6 @@ class PartyServer:
     # event loop
     # ------------------------------------------------------------------
 
-    def _next_message(self) -> msg.Message:
-        import queue
-        import time
-        # ONE deadline for the whole wait: heartbeats are discarded
-        # WITHOUT extending it — they keep the link warm and give the
-        # conductor early dead-link detection, but only *protocol*
-        # progress may satisfy this waiter (a wedged-but-beating
-        # conductor must still trip the timeout, as it did before
-        # heartbeats existed)
-        deadline = time.monotonic() + self.io_timeout
-        while True:
-            try:
-                m = self.tp.inbound.get(
-                    timeout=max(deadline - time.monotonic(), 0.0))
-            except queue.Empty:
-                raise TimeoutError(
-                    f"{self.name}: no protocol frame for "
-                    f"{self.io_timeout}s (lost conductor or peer?)") \
-                    from None
-            if isinstance(m, msg.Control) and m.kind == "hb":
-                continue        # keep-alive only — never routed
-            return m
-
-    def _route_data(self, m: msg.Message) -> None:
-        """Deliver one protocol message, stashing the classes that must
-        not reach the actor yet (see module docstring)."""
-        if isinstance(m, msg.BeaverOpen):
-            self._opens[m.src].append(m)
-            return
-        if isinstance(m, _P1_TYPES) and not self._p1_open:
-            self._pending_p1.append(m)
-            return
-        if isinstance(m, msg.WxShare) and not self._scoring:
-            self._pending_wx.append(m)
-            return
-        self._dispatch(m)
-
     def _dispatch(self, m: msg.Message) -> None:
         if isinstance(m, msg.Flag):
             self._flags_seen += 1
@@ -370,38 +340,10 @@ class PartyServer:
         self.tp.post_all(self.actor.handle(m) or [])
 
     def _pump_one(self) -> None:
-        """Receive one frame and route it; control frames mid-iteration
-        mean shutdown/peer-loss and raise."""
-        m = self._next_message()
-        if isinstance(m, msg.Control):
-            if m.kind == "__closed__":
-                raise PeerLost(
-                    f"{self.name}: connection to {m.src} failed: "
-                    f"{m.payload.get('error')}", peer=m.src)
-            if m.kind == "shutdown":
-                raise RuntimeError(
-                    f"{self.name}: shutdown while mid-protocol")
-            raise RuntimeError(f"{self.name}: unexpected control frame "
-                               f"{m.kind!r} mid-iteration")
-        self._route_data(m)
+        self.core.pump_one()
 
     def _next_ctrl(self, expect: str | None = None) -> msg.Control:
-        """Block for the next control frame, servicing protocol traffic
-        in the meantime (a fast peer's next-iteration Protocol-1 shares
-        can beat the conductor's `iter` frame and must be stashed)."""
-        while True:
-            m = self._next_message()
-            if isinstance(m, msg.Control):
-                if m.kind == "__closed__":
-                    raise PeerLost(
-                        f"{self.name}: connection to {m.src} failed: "
-                        f"{m.payload.get('error')}", peer=m.src)
-                if expect is not None and m.kind != expect \
-                        and m.kind != "shutdown":
-                    raise RuntimeError(
-                        f"{self.name}: expected {expect!r}, got {m.kind!r}")
-                return m
-            self._route_data(m)
+        return self.core.next_ctrl(expect)
 
     def _main_loop(self) -> None:
         while True:
@@ -413,6 +355,10 @@ class PartyServer:
                 self._run_resume(int(c.payload["step"]))
             elif c.kind == "score":
                 self._run_score(c.payload)
+            elif c.kind == "publish":
+                self._run_publish(c.payload)
+            elif c.kind == "swap":
+                self._run_swap(c.payload)
             elif c.kind == "fetch":
                 self._run_fetch()
             elif c.kind == "shutdown":
@@ -645,22 +591,68 @@ class PartyServer:
     def _run_score(self, payload: dict) -> None:
         """Serving path over the same wire: each party ships its local
         score share X_p W_p to C as an `infer.wx_share` frame; C sums
-        and applies the inverse link."""
+        in roster order and applies the inverse link.
+
+        With a `version` in the payload the share is computed against
+        that PUBLISHED version's pinned weights; a party whose serving
+        cache disagrees (version or key fingerprint) refuses with
+        `StaleCacheError` — a deterministic refusal the conductor never
+        retries — instead of silently scoring the wrong model."""
         rows = np.asarray(payload["rows"], np.float64)
+        version = payload.get("version")
         if self.name != "C":
-            self.tp.post(self.actor.wx_share_msg(rows, dst="C"))
+            self.tp.post(self.actor.wx_share_msg(rows, dst="C",
+                                                 version=version))
             return
         self._scoring = True
-        self.actor.begin_inference(rows.shape[0], len(self.names))
+        self.actor.begin_inference(rows.shape[0],
+                                   [n for n in self.names if n != "C"])
         while self._pending_wx:            # shares that beat the score frame
             self._dispatch(self._pending_wx.popleft())
-        while self.actor._wx_expected > 0:
+        while not self.actor.inference_ready:
             self._pump_one()
-        preds = self.actor.finish_inference(rows)
+        preds = self.actor.finish_inference(rows, version=version)
         self._scoring = False
         self.tp.send_control(msg.Control(
             self.name, CONDUCTOR, kind="score_result",
-            payload={"rid": payload.get("rid"), "preds": preds.tolist()}))
+            payload={"rid": payload.get("rid"), "preds": preds.tolist(),
+                     "version": version}))
+
+    def _run_publish(self, payload: dict) -> None:
+        """Pin the actor's CURRENT weights as served model `version` and
+        build the per-version serving cache (windowed digits + encrypted
+        constant — repro/serve/cache.py)."""
+        v = int(payload["version"])
+        self.actor.publish_version(v)
+        self.tp.send_control(msg.Control(
+            self.name, CONDUCTOR, kind="publish_ok",
+            payload={"party": self.name, "version": v,
+                     "key_fp": self.actor.serving_cache.key_fp}))
+
+    def _run_swap(self, payload: dict) -> None:
+        """Hot-model-swap barrier leg: load this party's OWN TrainState
+        slice from the agreed checkpoint step and republish it as the
+        new version.  The conductor's engine only issues `swap` with no
+        batch in flight, and every subsequent `score` frame carries the
+        new version, so no batch is ever scored by mixed versions (a
+        straggler party would refuse via the version check above)."""
+        step, v = int(payload["step"]), int(payload["version"])
+        if self.ckpt is None:
+            raise RuntimeError(f"{self.name}: hot swap to step {step} "
+                               "without a checkpoint directory")
+        got = self.ckpt.restore(
+            session_lib.TrainState.tree_template([self.name]), step=step)
+        if got is None:
+            raise RuntimeError(
+                f"{self.name}: swap step {step} is missing or invalid "
+                "in this party's checkpoint directory")
+        _, tree, extra = got
+        st = session_lib.TrainState.from_checkpoint(tree, extra)
+        self.actor.set_weights(st.weights[self.name], version=v)
+        self.tp.send_control(msg.Control(
+            self.name, CONDUCTOR, kind="swap_ok",
+            payload={"party": self.name, "version": v, "step": step,
+                     "key_fp": self.actor.serving_cache.key_fp}))
 
     def _run_fetch(self) -> None:
         dump = {

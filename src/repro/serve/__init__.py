@@ -1,6 +1,13 @@
 """Serving runtimes: continuous batching over slot-stacked KV caches
-(LM decode) and micro-batched federated GLM scoring (EFMVFL actors)."""
-from repro.serve.engine import (Request, ScoreRequest, ServeEngine,
-                                VFLScoringEngine)
+(LM decode) and a micro-batched secure scoring service for the
+federated GLM (EFMVFL actors: admission control, per-version serving
+caches, hot model swap)."""
+from repro.serve.batching import MicroBatcher
+from repro.serve.cache import (PartyServingCache, StaleCacheError,
+                               key_fingerprint_of)
+from repro.serve.engine import (FeatureKeyError, Request, ScoreRequest,
+                                ServeEngine, VFLScoringEngine)
 
-__all__ = ["ServeEngine", "Request", "VFLScoringEngine", "ScoreRequest"]
+__all__ = ["ServeEngine", "Request", "VFLScoringEngine", "ScoreRequest",
+           "FeatureKeyError", "MicroBatcher", "PartyServingCache",
+           "StaleCacheError", "key_fingerprint_of"]

@@ -1,0 +1,141 @@
+"""Property suite for the serving admission controller (MicroBatcher).
+
+Invariants under arbitrary (adversarial) arrival/poll schedules:
+  * a closed batch never exceeds max_batch;
+  * per-client FIFO order is preserved end to end;
+  * no starvation — every submitted item eventually leaves once polling
+    continues past the deadline;
+  * the deadline trigger always closes a NON-EMPTY batch (it can only
+    fire when something has been waiting).
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.serve.batching import MicroBatcher  # noqa: E402
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def drive(max_batch, max_wait_s, schedule):
+    """Run an arrival/advance/poll schedule; return (batches, submitted).
+
+    `schedule` is a list of ints: value v encodes one of three moves —
+      v % 3 == 0: submit v // 3 + 1 items,
+      v % 3 == 1: advance the clock by (v % 7) * max_wait_s / 4,
+      v % 3 == 2: poll once (deadline-triggered only, no flush).
+    Adversarial in the sense that arrivals, time and polls interleave
+    arbitrarily; determinism comes from the strategy sampler.
+    """
+    clock = FakeClock()
+    b = MicroBatcher(max_batch=max_batch, max_wait_s=max_wait_s,
+                     clock=clock)
+    submitted, batches, seq = [], [], 0
+    for v in schedule:
+        move = v % 3
+        if move == 0:
+            for _ in range(v // 3 % 4 + 1):
+                item = ("cl%d" % (seq % 3), seq)     # (client, seq)
+                b.submit(item)
+                submitted.append(item)
+                seq += 1
+        elif move == 1:
+            clock.t += (v % 7) * (max_wait_s / 4 if max_wait_s else 0.25)
+        else:
+            out = b.poll()
+            if out:
+                batches.append(out)
+    # drain: time passes and polling continues — nothing may starve
+    for _ in range(len(submitted) + 1):
+        clock.t += max(max_wait_s, 1.0)
+        out = b.poll()
+        if out:
+            batches.append(out)
+    return batches, submitted
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=7),
+       st.floats(min_value=0.0, max_value=2.0),
+       st.lists(st.integers(min_value=0, max_value=1000),
+                min_size=0, max_size=40))
+def test_batcher_invariants(max_batch, max_wait_s, schedule):
+    batches, submitted = drive(max_batch, max_wait_s, schedule)
+
+    # 1. admission never exceeds max_batch
+    for batch in batches:
+        assert len(batch) <= max_batch
+
+    # 2. no starvation: everything submitted eventually left, exactly once
+    served = [it for batch in batches for it in batch]
+    assert sorted(served, key=lambda x: x[1]) == submitted
+
+    # 3. per-client FIFO: each client's seqs leave in submit order
+    by_client = {}
+    for client, s in served:
+        by_client.setdefault(client, []).append(s)
+    for client, seqs in by_client.items():
+        assert seqs == sorted(seqs), f"client {client} reordered: {seqs}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=5),
+       st.lists(st.integers(min_value=0, max_value=100),
+                min_size=1, max_size=20))
+def test_deadline_trigger_closes_nonempty_batch(max_batch, arrivals):
+    """Whenever the deadline trigger fires, the batch it closes is
+    non-empty — an empty deadline batch would spin the service loop."""
+    clock = FakeClock()
+    b = MicroBatcher(max_batch=max_batch, max_wait_s=1.0, clock=clock)
+    assert b.poll() == []                 # nothing pending, nothing fires
+    for i, gap in enumerate(arrivals):
+        b.submit(i)
+        clock.t += gap / 50.0
+        out = b.poll()
+        if out:
+            assert len(out) > 0           # trigger fired => non-empty
+            assert len(out) <= max_batch
+    clock.t += 2.0
+    while b.pending:
+        out = b.poll()
+        assert out, "deadline passed with items pending but poll was empty"
+
+
+def test_size_trigger_exact():
+    """Size trigger fires the moment pending reaches max_batch, taking
+    exactly the oldest max_batch items — independent of the clock."""
+    b = MicroBatcher(max_batch=3, max_wait_s=1e9, clock=lambda: 0.0)
+    for i in range(7):
+        b.submit(i)
+    assert b.poll() == [0, 1, 2]
+    assert b.poll() == [3, 4, 5]
+    assert b.poll() == []                 # 1 < max_batch, deadline far off
+    assert b.poll(flush=True) == [6]
+    assert b.pending == 0
+
+
+def test_flush_ignores_deadline():
+    b = MicroBatcher(max_batch=8, max_wait_s=1e9, clock=lambda: 0.0)
+    for i in range(5):
+        b.submit(i)
+    assert b.poll() == []
+    assert b.poll(flush=True) == [0, 1, 2, 3, 4]
+
+
+def test_zero_wait_degenerates_to_synchronous():
+    """max_wait_s=0 means every poll drains whatever is pending — the
+    legacy synchronous engine behavior."""
+    clock = FakeClock()
+    b = MicroBatcher(max_batch=64, max_wait_s=0.0, clock=clock)
+    b.submit("a")
+    b.submit("b")
+    assert b.poll() == ["a", "b"]
+    assert b.poll() == []

@@ -1,0 +1,117 @@
+"""Serving-cache correctness: encrypted-constant and windowed-digit
+caches are keyed by (model version, key fingerprint) and INVALIDATE by
+refusal — a stale cache must raise `StaleCacheError`, never silently
+score against the wrong model or a dead key (the PR-6
+`TableMismatchError` contract applied to serving)."""
+import numpy as np
+import pytest
+
+from repro.core import glm as glm_lib
+from repro.core import protocols
+from repro.core.trainer import PartyData, VFLConfig
+from repro.crypto import fixed_point
+from repro.data import synthetic, vertical
+from repro.runtime import VFLScheduler
+from repro.serve import PartyServingCache, StaleCacheError, key_fingerprint_of
+
+
+def _trained_scheduler(he_backend="mock", key_bits=1024):
+    X, y = synthetic.credit_default(n=80, d=6, seed=9)
+    parts = vertical.split_columns(X, 2)
+    parties = [PartyData(nm, p) for nm, p in zip(["C", "B1"], parts)]
+    cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=2, batch_size=64,
+                    he_backend=he_backend, key_bits=key_bits, tol=0.0,
+                    seed=3)
+    sched = VFLScheduler(parties, y, cfg)
+    sched.run()
+    return sched, parts
+
+
+def test_publish_builds_version_pinned_caches():
+    sched, _ = _trained_scheduler()
+    for p in sched.parties:
+        p.publish_version(0)
+        cache = p.serving_cache
+        assert cache.version == 0
+        assert cache.key_fp == key_fingerprint_of(p.backend, p.name)
+        np.testing.assert_array_equal(cache.W, p.W)
+        # the windowed-digit precompute is exactly what he_matvec consumes
+        want = protocols.EncodedFeatures.make(
+            np.asarray(p.W, np.float64)[None, :], p.cfg.fx, p.cfg.exp_width)
+        np.testing.assert_array_equal(cache.w_feats.digits, want.digits)
+        # the encrypted constant is [[w]] under the party's own key
+        np.testing.assert_array_equal(
+            np.asarray(cache.enc_w),
+            np.asarray(p.backend.encrypt_share(
+                p.name, fixed_point.encode(cache.W, p.cfg.f))))
+
+
+def test_version_mismatch_refuses():
+    sched, parts = _trained_scheduler()
+    p = sched.parties[1]
+    p.publish_version(0)
+    rows = parts[1][:4]
+    np.testing.assert_array_equal(
+        p.predict_share(rows, version=0),
+        glm_lib.matvec_rowwise(rows, p.serving_cache.W))
+    with pytest.raises(StaleCacheError, match="holds model version 0"):
+        p.predict_share(rows, version=1)      # never published
+    with pytest.raises(StaleCacheError, match="republish"):
+        p.serving_cache.ensure(7, p.serving_cache.key_fp, party=p.name)
+
+
+def test_unpublished_party_refuses_versioned_scoring():
+    sched, parts = _trained_scheduler()
+    p = sched.parties[1]
+    assert p.serving_cache is None
+    with pytest.raises(StaleCacheError, match="no published model version"):
+        p.predict_share(parts[1][:2], version=0)
+    # the legacy unversioned path (training-time predict_wx) still works
+    np.testing.assert_array_equal(
+        p.predict_share(parts[1][:2]),
+        glm_lib.matvec_rowwise(parts[1][:2], p.W))
+
+
+def test_key_fingerprint_mismatch_refuses():
+    sched, _ = _trained_scheduler()
+    p = sched.parties[0]
+    p.publish_version(0)
+    cache = p.serving_cache
+    with pytest.raises(StaleCacheError, match="dead key"):
+        cache.ensure(0, "mock:2048", party=p.name)   # rotated key identity
+
+
+def test_paillier_fingerprint_tracks_modulus():
+    sched, _ = _trained_scheduler(he_backend="paillier", key_bits=256)
+    a, b = sched.parties
+    fa = key_fingerprint_of(a.backend, a.name)
+    fb = key_fingerprint_of(b.backend, b.name)
+    assert fa != fb                          # per-party keys, per-party fps
+    a.publish_version(0)
+    assert a.serving_cache.key_fp == fa
+    with pytest.raises(StaleCacheError):
+        a.serving_cache.ensure(0, fb, party=a.name)
+
+
+def test_swap_pins_old_version_and_refuses_it_after():
+    """Hot swap installs new weights as a NEW version; the old version's
+    pinned snapshot is untouched while it lives, and once the party has
+    moved on, requests stamped with the old version refuse — they can
+    no longer be silently scored by the new model."""
+    sched, parts = _trained_scheduler()
+    p = sched.parties[1]
+    p.publish_version(0)
+    w0 = np.array(p.serving_cache.W)
+
+    new_w = w0 + 0.25
+    p.set_weights(new_w, version=1)
+    np.testing.assert_array_equal(p.serving_cache.W, new_w)
+    assert p.serving_cache.version == 1
+    assert p.model_version == 1
+
+    rows = parts[1][:3]
+    np.testing.assert_array_equal(
+        p.predict_share(rows, version=1),
+        glm_lib.matvec_rowwise(rows, new_w))
+    with pytest.raises(StaleCacheError, match="wants 0|holds model version"):
+        p.predict_share(rows, version=0)     # stale stamp: refuse, not score

@@ -120,3 +120,105 @@ def test_vfl_scoring_engine_over_socket_cluster():
     want = glm_lib.GLMS["logistic"].predict(
         local.predict_wx(parties))[:n_req]
     np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def _tiny_trained_parties():
+    from repro.core.trainer import PartyData, VFLConfig
+    from repro.data import synthetic, vertical
+    from repro.runtime import VFLScheduler
+
+    X, y = synthetic.credit_default(n=120, d=6, seed=5)
+    parts = vertical.split_columns(X, 3)
+    names = ["C", "B1", "B2"]
+    parties = [PartyData(nm, p) for nm, p in zip(names, parts)]
+    cfg = VFLConfig(glm="logistic", lr=0.15, max_iter=2, batch_size=64,
+                    he_backend="mock", tol=0.0, seed=13)
+    sched = VFLScheduler(parties, y, cfg)
+    sched.run()
+    return sched, names, parts
+
+
+def test_vfl_submit_rejects_mismatched_feature_keys():
+    """Satellite bugfix: a feature dict whose keys disagree with the
+    party roster is refused at submit time with a named error that
+    spells out what is missing/unexpected — not a bare KeyError from
+    np.stack halfway through a later batch."""
+    import pytest
+
+    from repro.serve import FeatureKeyError, VFLScoringEngine
+
+    sched, names, parts = _tiny_trained_parties()
+    eng = VFLScoringEngine(sched.parties, max_batch=8)
+    row = {nm: part[0] for nm, part in zip(names, parts)}
+
+    bad = dict(row)
+    del bad["B2"]
+    bad["B9"] = row["B1"]
+    with pytest.raises(FeatureKeyError) as ei:
+        eng.submit(bad)
+    assert ei.value.missing == ["B2"]
+    assert ei.value.unexpected == ["B9"]
+    assert "B2" in str(ei.value) and "B9" in str(ei.value)
+
+    with pytest.raises(FeatureKeyError):
+        eng.submit({})                        # everything missing
+    assert eng.batcher.pending == 0           # nothing was half-admitted
+    eng.submit(row)                           # the good row still goes in
+    assert len(eng.run()) == 1
+
+
+def test_vfl_busy_reflects_in_flight_cluster_batch():
+    """Satellite bugfix regression: `busy` must stay True WHILE a
+    cluster-mode batch is being scored (old code reported False the
+    moment the queue drained, letting run() return early)."""
+    from repro.serve import VFLScoringEngine
+
+    observed = []
+
+    class StubCluster:
+        names = ["C", "B1", "B2"]
+        tp = None
+
+        def publish_model(self, version):
+            return {}
+
+        def score(self, X, version=None):
+            observed.append(eng.busy)         # mid-flight: must be True
+            n = X["C"].shape[0]
+            return np.zeros(n)
+
+    eng = VFLScoringEngine(cluster=StubCluster(), max_batch=4)
+    for _ in range(6):
+        eng.submit({nm: np.zeros(2) for nm in StubCluster.names})
+    assert eng.busy
+    done = eng.run()
+    assert len(done) == 6
+    assert observed and all(observed), \
+        f"busy went False while a batch was in flight: {observed}"
+    assert not eng.busy
+
+
+def test_vfl_deadline_batching_service_mode():
+    """Tentpole: with max_wait_s > 0 the engine is a service — requests
+    below max_batch sit until the deadline, then the worker thread
+    closes and scores the batch without any client call."""
+    import time as _time
+
+    from repro.serve import VFLScoringEngine
+
+    sched, names, parts = _tiny_trained_parties()
+    eng = VFLScoringEngine(sched.parties, max_batch=64, max_wait_s=0.02)
+    eng.start(poll_interval_s=0.002)
+    try:
+        for i in range(5):                     # 5 << max_batch: only the
+            eng.submit({nm: part[i]            # deadline can close this
+                        for nm, part in zip(names, parts)})
+        deadline = _time.monotonic() + 5.0
+        while len(eng.finished) < 5 and _time.monotonic() < deadline:
+            _time.sleep(0.005)
+    finally:
+        eng.stop(drain=True)
+    assert len(eng.finished) == 5
+    assert all(r.prediction is not None for r in eng.finished)
+    assert all(r.model_version == 0 for r in eng.finished)
+    assert all(r.t_done >= r.t_submit for r in eng.finished)

@@ -1,0 +1,263 @@
+"""Serving parity gauntlet: the continuous-batching secure scoring
+service must be BIT-IDENTICAL to the one-shot scorer —
+
+  * across link functions (logistic/poisson), crypto backends
+    (mock/paillier) and party counts k∈{2,3,4};
+  * in-process and over the real socket mesh (with measured wire bytes
+    == analytic for the `infer.wx_share` tag);
+  * under a chaos profile (drops + dups + reorders);
+  * across a mid-stream hot model swap — each request is scored by
+    exactly ONE model version, and each version's outputs match the
+    one-shot scorer for that version's weights.
+
+The one-shot reference is `GLMS[glm].predict(res.predict_wx(parties))`
+— same float64 association (roster order, C's own term first), so
+equality is exact, not approximate.
+"""
+import numpy as np
+import pytest
+
+from repro.core import glm as glm_lib
+from repro.core import trainer
+from repro.core.trainer import PartyData, VFLConfig
+from repro.data import synthetic, vertical
+from repro.runtime import LocalTransport, VFLScheduler
+from repro.runtime.chaos import ChaosProfile
+from repro.serve import VFLScoringEngine
+
+
+def _data(glm, n=160, seed=3):
+    if glm == "poisson":
+        return synthetic.dvisits(n=n, seed=seed)
+    return synthetic.credit_default(n=n, d=8, seed=seed)
+
+
+def _make_parties(X, k):
+    parts = vertical.split_columns(X, k)
+    names = ["C"] + [f"B{i}" for i in range(1, k)]
+    return [PartyData(name=nm, X=p) for nm, p in zip(names, parts)], \
+        names, parts
+
+
+def _cfg(glm, backend, **kw):
+    kw.setdefault("key_bits", 256 if backend == "paillier" else 1024)
+    kw.setdefault("max_iter", 2)
+    return VFLConfig(glm=glm, lr=0.1, batch_size=64,
+                     he_backend=backend, tol=0.0, seed=11, **kw)
+
+
+def _rows(names, parts, i):
+    return {nm: part[i] for nm, part in zip(names, parts)}
+
+
+def _wx_reference(weights, names, parts, rows):
+    """One-shot wx with the engine's exact association: C first, then
+    roster order, per-party shares via the batch-size-invariant
+    `matvec_rowwise` — bitwise-reproducible float64 sums."""
+    wx = glm_lib.matvec_rowwise(parts[0][rows], weights[names[0]])
+    for nm, part in zip(names[1:], parts[1:]):
+        wx = wx + glm_lib.matvec_rowwise(part[rows], weights[nm])
+    return wx
+
+
+# ---------------------------------------------------------------------------
+# 1. in-process parity grid
+# ---------------------------------------------------------------------------
+
+GRID_FAST = [("logistic", "mock", 2), ("logistic", "mock", 3),
+             ("logistic", "mock", 4), ("poisson", "mock", 2),
+             ("poisson", "mock", 3), ("poisson", "mock", 4),
+             ("logistic", "paillier", 2)]
+GRID_SLOW = [("logistic", "paillier", 3), ("logistic", "paillier", 4),
+             ("poisson", "paillier", 2), ("poisson", "paillier", 3),
+             ("poisson", "paillier", 4)]
+
+
+def _parity_inprocess(glm, backend, k):
+    X, y = _data(glm, n=96)
+    parties, names, parts = _make_parties(X, k)
+    cfg = _cfg(glm, backend)
+    sched = VFLScheduler(parties, y, cfg)
+    res = sched.run()
+    want = glm_lib.GLMS[glm].predict(res.predict_wx(parties))
+
+    eng = VFLScoringEngine(sched.parties, max_batch=7)   # ragged batches
+    n_req = 20
+    for i in range(n_req):
+        eng.submit(_rows(names, parts, i))
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    got = np.array([r.prediction for r in done])
+    np.testing.assert_array_equal(got, want[:n_req])     # BIT-identical
+    assert all(r.model_version == 0 for r in done)
+    assert eng.transport.meter.by_tag["infer.wx_share"] \
+        == n_req * (k - 1) * 8
+
+
+@pytest.mark.parametrize("glm,backend,k", GRID_FAST)
+def test_served_equals_one_shot_inprocess(glm, backend, k):
+    _parity_inprocess(glm, backend, k)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("glm,backend,k", GRID_SLOW)
+def test_served_equals_one_shot_inprocess_slow(glm, backend, k):
+    _parity_inprocess(glm, backend, k)
+
+
+# ---------------------------------------------------------------------------
+# 2. socket parity + measured wire bytes == analytic per tag
+# ---------------------------------------------------------------------------
+
+def _parity_socket(glm, backend, k, chaos=None):
+    from repro.launch.cluster import SocketCluster
+
+    X, y = _data(glm, n=96)
+    parties, names, parts = _make_parties(X, k)
+    cfg = _cfg(glm, backend)
+    local = trainer.train_vfl(parties, y, cfg, transport=LocalTransport())
+    want = glm_lib.GLMS[glm].predict(local.predict_wx(parties))
+
+    n_req = 24
+    with SocketCluster(parties, y, cfg, chaos=chaos) as cl:
+        cl.train()
+        eng = VFLScoringEngine(cluster=cl, max_batch=10)
+        for i in range(n_req):
+            eng.submit(_rows(names, parts, i))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        meters = cl.fetch_meters()
+        chaos_stats = getattr(cl.tp, "chaos_stats", None)
+    got = np.array([r.prediction for r in done])
+    np.testing.assert_array_equal(got, want[:n_req])     # BIT-identical
+    # wire invariant: measured serving bytes == analytic, == n·(k-1)·8
+    analytic = meters["meter"].by_tag["infer.wx_share"]
+    measured = meters["measured"].by_tag["infer.wx_share"]
+    assert analytic == measured == n_req * (k - 1) * 8
+    return chaos_stats
+
+
+@pytest.mark.parametrize("glm,k", [("logistic", 3), ("poisson", 2)])
+def test_served_equals_one_shot_socket(glm, k):
+    _parity_socket(glm, "mock", k)
+
+
+@pytest.mark.slow
+def test_served_equals_one_shot_socket_paillier():
+    _parity_socket("logistic", "paillier", 3)
+
+
+#: drops + dups + reorders on every link, timings scaled for CI — the
+#: serving path must come through bit-identical anyway (reliable
+#: delivery below the codec, same floats above it)
+CHAOS = ChaosProfile(seed=29, latency_s=0.001, jitter_s=0.0005,
+                     drop_p=0.10, dup_p=0.05, reorder_p=0.12)
+
+
+def test_served_equals_one_shot_under_chaos():
+    stats = _parity_socket("logistic", "mock", 3, chaos=CHAOS).to_dict()
+    assert stats["drops"] + stats["reorders"] > 0     # chaos actually bit
+
+
+# ---------------------------------------------------------------------------
+# 3. mid-stream hot model swap — one version per request, both exact
+# ---------------------------------------------------------------------------
+
+def _swap_reference(tmp_path, names, step):
+    """Per-party weights of checkpoint `step` (what the swap installs)."""
+    from repro.checkpoint import load_checkpoint, party_checkpoint_dir
+    from repro.runtime import session as session_lib
+
+    weights = {}
+    for nm in names:
+        got = load_checkpoint(party_checkpoint_dir(str(tmp_path), nm),
+                              session_lib.TrainState.tree_template([nm]),
+                              step=step)
+        assert got is not None, f"no step-{step} checkpoint for {nm}"
+        _, tree, extra = got
+        st = session_lib.TrainState.from_checkpoint(tree, extra)
+        weights[nm] = st.weights[nm]
+    return weights
+
+
+def test_hot_swap_socket_one_version_per_request(tmp_path):
+    from repro.launch.cluster import SocketCluster
+
+    glm, k, swap_step = "logistic", 3, 2
+    X, y = _data(glm, n=96)
+    parties, names, parts = _make_parties(X, k)
+    cfg = _cfg(glm, "mock", max_iter=4, checkpoint_every=1)
+    with SocketCluster(parties, y, cfg,
+                       checkpoint_dir=str(tmp_path)) as cl:
+        res = cl.train()
+        eng = VFLScoringEngine(cluster=cl, max_batch=4)
+        for i in range(8):                       # wave A: final weights (v0)
+            eng.submit(_rows(names, parts, i))
+        eng.run()
+        eng.swap_model(step=swap_step)           # barrier: applied at the
+        for i in range(8, 16):                   # next batch boundary
+            eng.submit(_rows(names, parts, i))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+
+    # every request was scored by exactly ONE version, and every batch
+    # is version-homogeneous — the swap barrier
+    assert all(r.model_version in (0, 1) for r in done)
+    by_batch = {}
+    for r in done:
+        by_batch.setdefault(r.batch_seq, set()).add(r.model_version)
+    assert all(len(vs) == 1 for vs in by_batch.values()), by_batch
+    a = [r for r in done if r.rid < 8]
+    b = [r for r in done if r.rid >= 8]
+    assert {r.model_version for r in a} == {0}
+    assert {r.model_version for r in b} == {1}
+
+    # each version's outputs are BIT-identical to the one-shot scorer
+    # run against that version's weights
+    rows_a, rows_b = np.arange(0, 8), np.arange(8, 16)
+    want_a = glm_lib.GLMS[glm].predict(
+        _wx_reference(res.weights, names, parts, rows_a))
+    w_step = _swap_reference(tmp_path, names, swap_step)
+    want_b = glm_lib.GLMS[glm].predict(
+        _wx_reference(w_step, names, parts, rows_b))
+    np.testing.assert_array_equal(
+        np.array([r.prediction for r in a]), want_a)
+    np.testing.assert_array_equal(
+        np.array([r.prediction for r in b]), want_b)
+
+
+def test_hot_swap_inprocess_with_pending_queue(tmp_path):
+    """In-process swap with requests STILL QUEUED when the swap lands:
+    batches closed before the swap score at v0, everything after at v1
+    — no batch mixes."""
+    from repro.launch.cluster import train_vfl_socket
+
+    glm, k = "logistic", 2
+    X, y = _data(glm, n=96)
+    parties, names, parts = _make_parties(X, k)
+    cfg = _cfg(glm, "mock", max_iter=3, checkpoint_every=1)
+    # the socket run writes the party checkpoints the swap will load
+    train_vfl_socket(parties, y, cfg, checkpoint_dir=str(tmp_path))
+
+    sched = VFLScheduler(parties, y, cfg)
+    res = sched.run()
+    eng = VFLScoringEngine(sched.parties, max_batch=5,
+                           checkpoint_dir=str(tmp_path))
+    for i in range(12):
+        eng.submit(_rows(names, parts, i))
+    assert eng.step() == 5                       # one batch at v0 ...
+    v = eng.swap_model(step=1)                   # ... swap lands with 7
+    assert v == 1                                # requests still pending
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    assert [r.model_version for r in done] == [0] * 5 + [1] * 7
+    by_batch = {}
+    for r in done:
+        by_batch.setdefault(r.batch_seq, set()).add(r.model_version)
+    assert all(len(vs) == 1 for vs in by_batch.values())
+
+    want_v0 = glm_lib.GLMS[glm].predict(
+        _wx_reference(res.weights, names, parts, np.arange(0, 5)))
+    w1 = _swap_reference(tmp_path, names, 1)
+    want_v1 = glm_lib.GLMS[glm].predict(
+        _wx_reference(w1, names, parts, np.arange(5, 12)))
+    np.testing.assert_array_equal(
+        np.array([r.prediction for r in done[:5]]), want_v0)
+    np.testing.assert_array_equal(
+        np.array([r.prediction for r in done[5:]]), want_v1)
